@@ -1,0 +1,39 @@
+"""Benchmark entrypoint. One function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  python -m benchmarks.run             # everything
+  python -m benchmarks.run --fast      # skip the slow Table-1 timing loops
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_tables
+
+    t0 = time.perf_counter()
+    rows = ["name,us_per_call,derived"]
+    rows += paper_tables.bench_table2()
+    rows += paper_tables.bench_consistency()
+    rows += paper_tables.bench_fig8_breakdown()
+    if not args.fast:
+        rows += paper_tables.bench_table1()
+    rows += kernel_bench.bench_mapper_throughput()
+    rows += kernel_bench.bench_warp_pallas_interpret()
+    rows += kernel_bench.bench_flash_attention()
+    rows += kernel_bench.bench_ssd()
+    print("\n".join(rows))
+    print(f"# total_bench_wall_s={time.perf_counter()-t0:.1f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

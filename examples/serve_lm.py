@@ -1,0 +1,8 @@
+"""Batched serving example: prefill + greedy decode on a reduced qwen2-1.5b.
+
+PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+main(["--arch", "qwen2-1.5b", "--reduced", "--batch", "4",
+      "--prompt-len", "32", "--gen", "16"])

@@ -1,0 +1,16 @@
+"""End-to-end training driver example: a reduced gemma-2b for 60 steps on a
+synthetic packed-token corpus, with checkpointing on.
+
+PYTHONPATH=src python examples/train_lm.py [--arch mamba2-130m]
+"""
+import sys
+
+from repro.launch.train import main
+
+arch = sys.argv[sys.argv.index("--arch") + 1] if "--arch" in sys.argv else "gemma-2b"
+main([
+    "--arch", arch, "--reduced",
+    "--steps", "60", "--global-batch", "8", "--seq-len", "64",
+    "--vocab", "512", "--run-dir", "/tmp/repro_train_example",
+    "--ckpt-every", "20", "--log-every", "10",
+])

@@ -1,0 +1,118 @@
+"""HLO text analysis: collective traffic extraction.
+
+``compiled.as_text()`` (post-SPMD-partitioning) is a per-device program;
+collective operand/result shapes are per-device.  We extract every
+collective op, its payload bytes and its replica-group size, and convert to
+*per-device link traffic* with the standard ring-algorithm factors:
+
+  all-reduce          2 * D * (n-1)/n
+  all-gather          D_out * (n-1)/n
+  reduce-scatter      D_in  * (n-1)/n  (= D_out * (n-1))
+  all-to-all          D * (n-1)/n
+  collective-permute  D
+
+The collective roofline term is  sum(traffic) / link_bw  — equivalent to the
+spec's  collective_bytes / (chips * link_bw)  with collective_bytes summed
+over chips.
+
+CAVEAT (documented in EXPERIMENTS.md): while-loop bodies appear once in the
+text, so callers must scale loop-resident collectives by trip count — the
+dry-run handles this by probing unrolled reduced-depth model variants and
+scaling analytically (see `repro.launch.dryrun`).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default
+
+
+def link_traffic(op: str, payload: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * payload * (n - 1) / n
+    if op == "all-gather":
+        return payload * (n - 1) / n
+    if op == "reduce-scatter":
+        return payload * (n - 1)  # payload here is the (scattered) output
+    if op == "all-to-all":
+        return payload * (n - 1) / n
+    if op == "collective-permute":
+        return float(payload)
+    return float(payload)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind {count, payload_bytes, link_bytes} for one HLO module."""
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "payload_bytes": 0.0, "link_bytes": 0.0}
+    )
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_txt, op, is_start = m.group(1), m.group(2), m.group(3)
+        if is_start:
+            # async start: result is (operand, result[, scratch]) — halve to
+            # avoid double counting operand+result.
+            payload = _shape_bytes(shape_txt) // 2
+        else:
+            payload = _shape_bytes(shape_txt)
+        n = _group_size(line)
+        s = stats[op]
+        s["count"] += 1
+        s["payload_bytes"] += payload
+        s["link_bytes"] += link_traffic(op, payload, n)
+    return dict(stats)
+
+
+def total_link_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(s["link_bytes"] for s in stats.values())

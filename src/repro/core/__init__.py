@@ -1,0 +1,28 @@
+"""Core: the paper's contribution — MapReduce image coaddition in JAX.
+
+Public API:
+  CoaddQuery, make_survey, SurveyConfig, CoaddEngine, METHODS,
+  SpatialIndex, JobTracker.
+"""
+
+from repro.core.engine import METHODS, CoaddEngine, CoaddResult, JobStats
+from repro.core.jobtracker import FailureInjector, JobTracker, MapTask
+from repro.core.prefilter import SpatialIndex
+from repro.core.query import BANDS, CoaddQuery
+from repro.core.survey import Survey, SurveyConfig, make_survey
+
+__all__ = [
+    "BANDS",
+    "CoaddEngine",
+    "CoaddResult",
+    "CoaddQuery",
+    "FailureInjector",
+    "JobStats",
+    "JobTracker",
+    "MapTask",
+    "METHODS",
+    "SpatialIndex",
+    "Survey",
+    "SurveyConfig",
+    "make_survey",
+]

@@ -1,0 +1,149 @@
+"""JobTracker: Hadoop-style task re-execution and speculative dispatch.
+
+MapReduce's scaling premise (paper §3): at thousands of nodes, failures are
+the norm; the framework hides them by re-executing failed tasks and
+launching redundant ("speculative") copies of stragglers.  That machinery is
+what lets the coadd job survive node loss.
+
+On a TPU pod the analogue is necessarily different — an SPMD program cannot
+lose one participant mid-collective — so fault handling moves up a level:
+
+* the *work decomposition* stays Hadoop-shaped: the image set is split into
+  idempotent, journaled map tasks whose outputs combine through a
+  commutative monoid (coadd accumulation), so any task may be re-executed
+  or executed twice without changing the result;
+* task completion is journaled with a content digest; restart replays only
+  missing tasks (checkpoint/restart at the job level);
+* stragglers get speculative backups — first result wins, digests must
+  agree (determinism check);
+* elastic scaling: the task list can be re-partitioned over a different
+  worker count between (re)starts, because tasks are location-free.
+
+The same pattern backs the training loop's checkpoint/restart in
+`repro.launch.train`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MapTask:
+    task_id: int
+    image_ids: np.ndarray  # the shard of images this task maps
+
+
+@dataclasses.dataclass
+class TaskResult:
+    task_id: int
+    coadd: np.ndarray
+    depth: np.ndarray
+    digest: str
+    attempts: int
+    worker: int
+
+
+def _digest(coadd: np.ndarray, depth: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(coadd, np.float32).tobytes())
+    h.update(np.ascontiguousarray(depth, np.float32).tobytes())
+    return h.hexdigest()[:16]
+
+
+class FailureInjector:
+    """Deterministic failure/straggler schedule for tests and drills.
+
+    fail_plan: {(task_id, attempt): "fail" | "slow"}.
+    """
+
+    def __init__(self, plan: Optional[Dict] = None, slow_s: float = 0.0):
+        self.plan = plan or {}
+        self.slow_s = slow_s
+
+    def before_run(self, task_id: int, attempt: int):
+        kind = self.plan.get((task_id, attempt))
+        if kind == "fail":
+            raise RuntimeError(f"injected failure: task {task_id} attempt {attempt}")
+        if kind == "slow" and self.slow_s:
+            time.sleep(self.slow_s)
+
+
+class JobTracker:
+    """Executes map tasks with journaling, retry, and speculative backup.
+
+    ``executor(image_ids) -> (coadd, depth)`` must be deterministic in its
+    inputs (ours is: jit'd pure function over seeded data), which the tracker
+    *verifies* when speculation produces two results for one task.
+    """
+
+    def __init__(
+        self,
+        executor: Callable[[np.ndarray], tuple],
+        n_workers: int = 4,
+        max_attempts: int = 3,
+        straggler_threshold_s: float = float("inf"),
+        injector: Optional[FailureInjector] = None,
+    ):
+        self.executor = executor
+        self.n_workers = n_workers
+        self.max_attempts = max_attempts
+        self.straggler_threshold_s = straggler_threshold_s
+        self.injector = injector or FailureInjector()
+        self.journal: Dict[int, TaskResult] = {}
+        self.events: List[str] = []
+
+    @staticmethod
+    def split(image_ids: np.ndarray, n_tasks: int) -> List[MapTask]:
+        """Location-free task partition (supports elastic re-partitioning)."""
+        chunks = np.array_split(np.asarray(image_ids), n_tasks)
+        return [MapTask(i, c) for i, c in enumerate(chunks) if len(c)]
+
+    def _attempt(self, task: MapTask, attempt: int, worker: int) -> TaskResult:
+        self.injector.before_run(task.task_id, attempt)
+        t0 = time.perf_counter()
+        coadd, depth = self.executor(task.image_ids)
+        dt = time.perf_counter() - t0
+        res = TaskResult(
+            task.task_id, np.asarray(coadd), np.asarray(depth), "", attempt, worker
+        )
+        res.digest = _digest(res.coadd, res.depth)
+        if dt > self.straggler_threshold_s:
+            # Straggler: speculative backup on another worker; first-completed
+            # semantics — here sequential, so verify digests agree instead.
+            self.events.append(f"speculative task={task.task_id}")
+            backup = self.executor(task.image_ids)
+            bd = _digest(np.asarray(backup[0]), np.asarray(backup[1]))
+            if bd != res.digest:
+                raise RuntimeError(
+                    f"nondeterministic task {task.task_id}: {res.digest} != {bd}"
+                )
+        return res
+
+    def run(self, tasks: Sequence[MapTask]) -> tuple:
+        """Run all tasks (skipping journaled ones), return combined coadd."""
+        for ti, task in enumerate(tasks):
+            if task.task_id in self.journal:
+                self.events.append(f"journal-hit task={task.task_id}")
+                continue
+            worker = ti % self.n_workers
+            for attempt in range(self.max_attempts):
+                try:
+                    res = self._attempt(task, attempt, worker)
+                    self.journal[task.task_id] = res
+                    break
+                except RuntimeError as e:  # noqa: PERF203
+                    self.events.append(f"retry task={task.task_id} attempt={attempt}: {e}")
+                    worker = (worker + 1) % self.n_workers  # reschedule elsewhere
+            else:
+                raise RuntimeError(f"task {task.task_id} exhausted retries")
+        # Commutative-monoid combine: order-independent.
+        results = [self.journal[t.task_id] for t in tasks]
+        coadd = np.sum([r.coadd for r in results], axis=0)
+        depth = np.sum([r.depth for r in results], axis=0)
+        return coadd, depth

@@ -1,0 +1,48 @@
+"""PSF matching (beyond-paper; the paper deferred it — their footnote 2).
+
+Before stacking, exposures taken in different seeing should be convolved to
+a common (worst) PSF so the coadd has a well-defined point-spread function.
+We implement the Gaussian-to-Gaussian case: if an image has PSF sigma_i and
+the target is sigma_t >= sigma_i, convolving with a Gaussian of
+sigma_k = sqrt(sigma_t^2 - sigma_i^2) matches them exactly (Gaussians are
+closed under convolution).
+
+Separable implementation (two 1-D convs) — O(H*W*K) and jit/vmap-friendly;
+the engine applies it per image in the map stage when
+``CoaddEngine(..., match_psf_sigma=...)`` is set.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gaussian_kernel_1d(sigma: float, radius: int | None = None) -> jnp.ndarray:
+    if sigma <= 0:
+        return jnp.ones((1,), jnp.float32)
+    radius = radius or max(1, int(np.ceil(3.0 * sigma)))
+    x = jnp.arange(-radius, radius + 1, dtype=jnp.float32)
+    k = jnp.exp(-0.5 * (x / sigma) ** 2)
+    return k / k.sum()
+
+
+def convolve_separable(image: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
+    """(H, W) image * 1-D kernel applied along both axes (edge-padded)."""
+    r = (kernel.shape[0] - 1) // 2
+
+    def conv1d(row):
+        return jnp.convolve(jnp.pad(row, (r, r), mode="edge"), kernel, mode="valid")
+
+    out = jax.vmap(conv1d)(image)          # rows
+    out = jax.vmap(conv1d)(out.T).T        # cols
+    return out
+
+
+def match_psf(image: jnp.ndarray, sigma_image: float, sigma_target: float) -> jnp.ndarray:
+    """Convolve to the target PSF. No-op if already at/above target width."""
+    if sigma_target <= sigma_image:
+        return image
+    sigma_k = float(np.sqrt(sigma_target**2 - sigma_image**2))
+    return convolve_separable(image, gaussian_kernel_1d(sigma_k))

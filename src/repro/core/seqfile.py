@@ -1,0 +1,185 @@
+"""Sequence-file containers: packing many small images into few large arrays.
+
+Paper §4.1.2–4.1.3: Hadoop performs poorly on many small files because job
+init does serial per-file RPCs; *sequence files* concatenate small files into
+few large indexed containers.  Two layouts are compared:
+
+* **unstructured** — FITS files assigned to containers at random (Fig. 9 top).
+  No container-level pruning is possible; every container must be read.
+* **structured** — one container family per (band, camcol) CCD (Fig. 9
+  bottom), mirroring the camera layout, so whole containers are pruned by the
+  same glob logic that prefilters raw files.
+
+TPU adaptation: a container is a dense ``(cap, H, W)`` pixel array plus
+columnar metadata, i.e. exactly the layout a `shard_map` over the ``data``
+axis wants.  "Few large files" becomes "few large device-resident arrays";
+the per-file RPC cost becomes per-array dispatch cost, which `benchmarks/`
+measures to reproduce Table 1's orderings.
+
+An index (`SeqFileIndex`) maps image_id -> (pack, slot) — the sequence-file
+index the paper's SQL method uses to build file splits (§4.1.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.survey import Survey
+
+META_COLS = (
+    "image_id",
+    "run",
+    "camcol",
+    "band_id",
+    "field",
+)
+FLOAT_COLS = ("t_obs", "ra_min", "ra_max", "dec_min", "dec_max")
+
+
+@dataclasses.dataclass
+class PackedDataset:
+    """A set of sequence-file containers.
+
+    pixels:  (P, cap, H, W) float32 — container pixel payloads.
+    wcs:     (P, cap, 8)    float32 — per-image WCS vectors.
+    valid:   (P, cap)       bool    — slot occupancy (containers may be ragged).
+    int metadata columns: (P, cap) int32 each; float columns likewise.
+    pack_band / pack_camcol: (P,) int32 — container key for structured packs
+      (-1 where mixed, i.e. unstructured).
+    """
+
+    layout: str  # "per_file" | "unstructured" | "structured"
+    pixels: np.ndarray
+    wcs: np.ndarray
+    valid: np.ndarray
+    ints: Dict[str, np.ndarray]
+    floats: Dict[str, np.ndarray]
+    pack_band: np.ndarray
+    pack_camcol: np.ndarray
+    index: Dict[int, Tuple[int, int]]  # image_id -> (pack, slot)
+
+    @property
+    def n_packs(self) -> int:
+        return self.pixels.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.pixels.shape[1]
+
+    @property
+    def n_images(self) -> int:
+        return int(self.valid.sum())
+
+    def image_hw(self) -> Tuple[int, int]:
+        return self.pixels.shape[2], self.pixels.shape[3]
+
+    def gather(self, image_ids: np.ndarray, pad_to: Optional[int] = None):
+        """Gather a dense mapper-input batch for an exact id list.
+
+        Returns (pixels (N,H,W), wcs (N,8), meta dict, valid (N,)) with
+        optional padding so callers can keep static shapes. Also returns the
+        number of distinct packs touched — the paper's "mapper object"
+        locality statistic (§4.1.4).
+        """
+        locs = [self.index[int(i)] for i in image_ids]
+        packs = np.array([p for p, _ in locs], np.int32)
+        slots = np.array([s for _, s in locs], np.int32)
+        n = len(locs)
+        pad = (pad_to or n) - n
+        if pad < 0:
+            raise ValueError(f"pad_to={pad_to} < n={n}")
+        px = self.pixels[packs, slots]
+        wv = self.wcs[packs, slots]
+        ints = {k: v[packs, slots] for k, v in self.ints.items()}
+        floats = {k: v[packs, slots] for k, v in self.floats.items()}
+        valid = np.ones((n,), bool)
+        if pad:
+            px = np.concatenate([px, np.zeros((pad,) + px.shape[1:], px.dtype)])
+            wv = np.concatenate([wv, np.tile(wv[-1:], (pad, 1))])
+            ints = {k: np.concatenate([v, np.full((pad,), -1, v.dtype)]) for k, v in ints.items()}
+            floats = {k: np.concatenate([v, np.zeros((pad,), v.dtype)]) for k, v in floats.items()}
+            valid = np.concatenate([valid, np.zeros((pad,), bool)])
+        n_packs_touched = len(np.unique(packs))
+        return px, wv, ints, floats, valid, n_packs_touched
+
+
+def _emit(
+    layout: str,
+    groups: List[np.ndarray],
+    survey: Survey,
+    group_band: List[int],
+    group_camcol: List[int],
+) -> PackedDataset:
+    tab = survey.meta_table()
+    h, w = survey.config.height, survey.config.width
+    cap = max(len(g) for g in groups)
+    P = len(groups)
+    pixels = np.zeros((P, cap, h, w), np.float32)
+    wcs = np.zeros((P, cap, 8), np.float32)
+    valid = np.zeros((P, cap), bool)
+    ints = {k: np.full((P, cap), -1, np.int32) for k in META_COLS}
+    floats = {k: np.zeros((P, cap), np.float32) for k in FLOAT_COLS}
+    index: Dict[int, Tuple[int, int]] = {}
+    for p, ids in enumerate(groups):
+        for s, img_id in enumerate(ids):
+            im = survey.images[int(img_id)]
+            pixels[p, s] = im.pixels
+            wcs[p, s] = im.wcs.to_vector()
+            valid[p, s] = True
+            for k in META_COLS:
+                ints[k][p, s] = tab[k][img_id]
+            for k in FLOAT_COLS:
+                floats[k][p, s] = tab[k][img_id]
+            index[int(img_id)] = (p, s)
+    return PackedDataset(
+        layout=layout,
+        pixels=pixels,
+        wcs=wcs,
+        valid=valid,
+        ints=ints,
+        floats=floats,
+        pack_band=np.array(group_band, np.int32),
+        pack_camcol=np.array(group_camcol, np.int32),
+        index=index,
+    )
+
+
+def pack_per_file(survey: Survey) -> PackedDataset:
+    """Each image is its own 'file' (the paper's raw-FITS baseline)."""
+    ids = np.arange(len(survey))
+    groups = [np.array([i]) for i in ids]
+    tab = survey.meta_table()
+    return _emit(
+        "per_file",
+        groups,
+        survey,
+        [int(tab["band_id"][i]) for i in ids],
+        [int(tab["camcol"][i]) for i in ids],
+    )
+
+
+def pack_unstructured(survey: Survey, pack_capacity: int = 64, seed: int = 0) -> PackedDataset:
+    """Random assignment of images to containers (Fig. 9 top)."""
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(len(survey))
+    groups = [ids[i : i + pack_capacity] for i in range(0, len(ids), pack_capacity)]
+    return _emit("unstructured", groups, survey, [-1] * len(groups), [-1] * len(groups))
+
+
+def pack_structured(survey: Survey, pack_capacity: int = 64) -> PackedDataset:
+    """One container family per (band, camcol) CCD (Fig. 9 bottom)."""
+    tab = survey.meta_table()
+    groups: List[np.ndarray] = []
+    gband: List[int] = []
+    gcamcol: List[int] = []
+    for band in range(survey.config.n_bands):
+        for camcol in range(survey.config.n_camcols):
+            sel = np.where((tab["band_id"] == band) & (tab["camcol"] == camcol))[0]
+            for i in range(0, len(sel), pack_capacity):
+                groups.append(sel[i : i + pack_capacity])
+                gband.append(band)
+                gcamcol.append(camcol)
+    return _emit("structured", groups, survey, gband, gcamcol)

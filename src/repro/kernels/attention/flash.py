@@ -1,0 +1,117 @@
+"""Pallas TPU flash attention (forward) with online softmax.
+
+Classic FlashAttention blocking adapted to TPU memory hierarchy: the grid is
+(q_blocks, kv_blocks) with the kv dimension innermost ("arbitrary"
+semantics); running max / denominator / accumulator live in VMEM scratch and
+persist across kv grid steps; the output block is written on the last kv
+step.  Q/K/V blocks stream HBM->VMEM via BlockSpecs; block sizes default to
+MXU-aligned (128, 128).
+
+Causal + sliding-window masking is applied in-kernel.  GQA is handled by the
+wrapper (kv head index = q head index // group) so the kernel itself only
+sees one (batch, head) slice — vmapped on the outside, which Pallas turns
+into extra grid dimensions.
+
+Backward: `ops.flash_attention` wraps this in a custom_vjp whose backward
+pass recomputes attention with the jnp reference — the standard
+"kernel-forward, XLA-backward" migration path; a hand-written bwd kernel is
+a further optimization documented in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, scale, causal, window, block_q, block_k, seq_len
+):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...]  # (block_q, d)
+    k = k_ref[...]  # (block_k, d)
+    v = v_ref[...]  # (block_k, d)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]          # (bq, 1)
+    l_prev = l_ref[...]          # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                       # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)              # (bq, 1)
+    l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        o_ref[...] = (acc_ref[...] / jnp.where(l == 0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_attention_single(
+    q, k, v, *, causal=True, window=None, scale=None,
+    block_q=128, block_k=128, interpret=True,
+):
+    """One (seq, head_dim) attention slice. q,k,v: (S, D) -> (S, D)."""
+    s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq {s} must divide blocks ({block_q},{block_k})")
+    scale = float(scale if scale is not None else 1.0 / (d ** 0.5))
+    grid = (s // block_q, s // block_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        seq_len=s,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom
+        ],
+        interpret=interpret,
+    )(q, k, v)

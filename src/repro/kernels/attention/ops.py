@@ -1,0 +1,59 @@
+"""Jitted GQA flash-attention wrapper with custom_vjp.
+
+Forward: Pallas flash kernel (vmapped over batch x q-heads; kv heads are
+index-mapped for GQA so no repeat materializes).  Backward: recompute with
+the jnp reference and differentiate through it — the standard
+kernel-forward / XLA-backward bring-up path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.flash import flash_attention_single
+from repro.kernels.attention.ref import mha_ref
+
+
+@partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8)
+)
+def flash_attention(
+    q, k, v, causal=True, window=None, block_q=128, block_k=128, interpret=True, scale=None
+):
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D) -> (B, Hq, S, D)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+
+    def per_head(qh, kh, vh):
+        return flash_attention_single(
+            qh, kh, vh, causal=causal, window=window, scale=scale,
+            block_q=block_q, block_k=block_k, interpret=interpret,
+        )
+
+    # GQA: gather the kv head for each q head (no repeat in HBM).
+    kv_idx = jnp.arange(hq) // group
+    k_g = k[:, kv_idx]
+    v_g = v[:, kv_idx]
+    return jax.vmap(jax.vmap(per_head))(q, k_g, v_g)
+
+
+def _fwd(q, k, v, causal, window, block_q, block_k, interpret, scale):
+    out = flash_attention(q, k, v, causal, window, block_q, block_k, interpret, scale)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, block_q, block_k, interpret, scale, res, g):
+    q, k, v = res
+
+    def ref_fn(q, k, v):
+        return mha_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+    _, vjp = jax.vjp(ref_fn, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,22 @@
+"""Jitted batched wrapper for the SSD kernel (B/C shared across heads)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd_chunked
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(a, B, C, x, chunk=64, interpret=True):
+    """a: (Bt,T,H), B/C: (Bt,T,N), x: (Bt,T,H,P) -> (Bt,T,H,P)."""
+
+    def per_batch(a_b, B_b, C_b, x_b):
+        def per_head(a_h, x_h):
+            return ssd_chunked(a_h, B_b, C_b, x_h, chunk=chunk, interpret=interpret)
+
+        return jax.vmap(per_head, in_axes=(1, 1), out_axes=1)(a_b, x_b)
+
+    return jax.vmap(per_batch)(a, B, C, x)

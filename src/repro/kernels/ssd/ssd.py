@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (state-space duality form).
+
+The SSD insight (arXiv:2405.21060): the linear recurrence splits into
+chunk-local *quadratic* attention-like work (MXU matmuls) plus a tiny
+sequential state carry between chunks.  TPU mapping:
+
+  grid = (T / L,) iterated sequentially ("arbitrary"); the inter-chunk state
+  S (N x P) lives in VMEM scratch and persists across grid steps — the
+  sequential part touches only N*P floats per chunk while all O(L^2) work is
+  dense matmul.
+
+Per chunk (inclusive decay cumprods alpha_i = prod_{j<=i} a_j, computed in
+log space for stability; a in (0,1] so every ratio below is <= 1):
+
+  intra:  Y += (M o (C B^T)) X        M[i,j] = alpha_i / alpha_j, j <= i
+  inter:  Y += alpha o (C S_in)
+  carry:  S_out = alpha_{L-1} S_in + B_w^T X,   B_w[j] = (alpha_{L-1}/alpha_j) B_j
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, b_ref, c_ref, x_ref, y_ref, s_ref, *, chunk):
+    ci = pl.program_id(0)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    a = a_ref[...]           # (L, 1) decay in (0, 1]
+    B = b_ref[...]           # (L, N)
+    C = c_ref[...]           # (L, N)
+    X = x_ref[...]           # (L, P)
+    S = s_ref[...]           # (N, P) carried state
+
+    log_a = jnp.log(a)                       # (L, 1)
+    cum = jnp.cumsum(log_a, axis=0)          # inclusive log alpha
+    # M[i, j] = exp(cum_i - cum_j) for j <= i else 0
+    li = cum                                  # (L, 1)
+    lj = cum.reshape(1, chunk)                # (1, L)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    m = jnp.where(jj <= ii, jnp.exp(li - lj), 0.0)       # (L, L)
+
+    cb = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # (L, L)
+    y_intra = jnp.dot(m * cb, X, preferred_element_type=jnp.float32)
+
+    alpha = jnp.exp(cum)                                  # (L, 1)
+    y_inter = alpha * jnp.dot(C, S, preferred_element_type=jnp.float32)
+
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # State carry: S_out = alpha_last * S + sum_j (alpha_last/alpha_j) B_j X_j^T
+    alpha_last = jnp.exp(cum[chunk - 1, 0])
+    w = jnp.exp(cum[chunk - 1, 0] - cum)                  # (L, 1)
+    s_ref[...] = alpha_last * S + jnp.dot(
+        (B * w).T, X, preferred_element_type=jnp.float32
+    )
+
+
+def ssd_chunked(a, B, C, x, *, chunk=64, interpret=True):
+    """One (batch, head) slice. a: (T,), B/C: (T,N), x: (T,P) -> y (T,P)."""
+    t = a.shape[0]
+    n = B.shape[1]
+    p = x.shape[1]
+    chunk = min(chunk, t)
+    if t % chunk:
+        raise ValueError(f"T={t} must divide chunk={chunk}")
+    grid = (t // chunk,)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, 1), lambda c: (c, 0)),
+            pl.BlockSpec((chunk, n), lambda c: (c, 0)),
+            pl.BlockSpec((chunk, n), lambda c: (c, 0)),
+            pl.BlockSpec((chunk, p), lambda c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((chunk, p), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(a.reshape(t, 1).astype(jnp.float32), B, C, x)

@@ -1,0 +1,42 @@
+"""Jitted public wrappers for the warp kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a real
+TPU deployment set ``repro.kernels.INTERPRET = False`` (or pass explicitly)
+and the same BlockSpecs lower through Mosaic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.warp.warp import coadd_fused as _coadd_fused
+from repro.kernels.warp.warp import warp_project as _warp_project
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def warp_project(image, wcs_vec, accept, grid_ra, grid_dec, block_rows=8, interpret=True):
+    return _warp_project(
+        image, wcs_vec, accept, grid_ra, grid_dec,
+        block_rows=block_rows, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def warp_batch(pixels, wcs_vecs, accepts, grid_ra, grid_dec, block_rows=8, interpret=True):
+    """(N,H,W) -> (N,Q,Q) tiles + coverages, vmapping the single-image kernel."""
+    fn = lambda p, w, a: _warp_project(  # noqa: E731
+        p, w, a, grid_ra, grid_dec, block_rows=block_rows, interpret=interpret
+    )
+    return jax.vmap(fn)(pixels, wcs_vecs, accepts)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def coadd_fused(pixels, wcs_vecs, accepts, grid_ra, grid_dec, block_rows=8, interpret=True):
+    """Fused map+reduce: (N,H,W) images -> (Q,Q) coadd + depth."""
+    return _coadd_fused(
+        pixels, wcs_vecs, accepts, grid_ra, grid_dec,
+        block_rows=block_rows, interpret=interpret,
+    )

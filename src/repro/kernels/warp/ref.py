@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the warp kernel: exactly the mapper's projection."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mapper import project_one
+
+
+def warp_project_ref(image, wcs_vec, accept, grid_ra, grid_dec):
+    """(H,W) image -> (Q,Q) projected tile + coverage. Oracle."""
+    return project_one(image, wcs_vec, accept, grid_ra, grid_dec)
+
+
+def warp_batch_ref(pixels, wcs_vecs, accepts, grid_ra, grid_dec):
+    return jax.vmap(warp_project_ref, in_axes=(0, 0, 0, None, None))(
+        pixels, wcs_vecs, accepts, grid_ra, grid_dec
+    )
+
+
+def coadd_fused_ref(pixels, wcs_vecs, accepts, grid_ra, grid_dec):
+    """Map + reduce oracle: sum of projected tiles and coverages."""
+    tiles, covs = warp_batch_ref(pixels, wcs_vecs, accepts, grid_ra, grid_dec)
+    return tiles.sum(0), covs.sum(0)

@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  1. PRODUCTION compile (scan-over-layers, full depth) on the requested
+     mesh: proves the sharding config is coherent, records
+     memory_analysis() (fits-on-chip evidence) and the collective schedule.
+  2. COST PROBES (single-pod only): unrolled reduced-depth variants whose
+     cost_analysis deltas give exact per-layer FLOPs / bytes / collective
+     traffic, scaled analytically to full depth (HloCostAnalysis counts
+     while-loop bodies once — see `repro.analysis.hlo`).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out-dir experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _jit_cell(cell):
+    return jax.jit(
+        cell.fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+
+
+def _compile_cell(cell) -> Dict:
+    t0 = time.perf_counter()
+    lowered = _jit_cell(cell).lower(*cell.args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    from repro.analysis import hlo as hlo_mod
+
+    text = compiled.as_text()
+    coll = hlo_mod.collective_stats(text)
+    return {
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops": ca.get("flops", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "collectives": coll,
+        "hlo_bytes": len(text),
+    }
+
+
+def _probe_cfgs(cfg):
+    """Reduced-depth unrolled variants + the scale rule (see module doc)."""
+    r = dataclasses.replace
+    base = dict(scan_layers=False, force_dense_attn=True)
+    fam = cfg.family
+    if fam in ("dense", "moe", "ssm"):
+        return {
+            "a": r(cfg, n_layers=1, **base),
+            "b": r(cfg, n_layers=2, **base),
+        }, {"layers": cfg.n_layers}
+    if fam == "vlm":
+        per = cfg.cross_attn_period
+        return {
+            "a": r(cfg, n_layers=per, **base),
+            "b": r(cfg, n_layers=2 * per, **base),
+        }, {"groups": cfg.n_layers // per}
+    if fam == "hybrid":
+        per = cfg.shared_attn_period
+        groups = cfg.n_layers // per
+        rem = cfg.n_layers - groups * per
+        probes = {
+            "a": r(cfg, n_layers=per, **base),
+            "b": r(cfg, n_layers=2 * per, **base),
+        }
+        if rem:
+            probes["c"] = r(cfg, n_layers=per + rem, **base)
+        return probes, {"groups": groups, "rem": rem}
+    if fam == "encdec":
+        return {
+            "a": r(cfg, n_layers=1, n_encoder_layers=1, **base),
+            "b": r(cfg, n_layers=1, n_encoder_layers=2, **base),
+            "c": r(cfg, n_layers=2, n_encoder_layers=1, **base),
+        }, {"enc": cfg.n_encoder_layers, "dec": cfg.n_layers}
+    raise ValueError(fam)
+
+
+def _scale_costs(fam: str, probes: Dict[str, Dict], info: Dict) -> Dict:
+    """Combine probe costs (flops/bytes/collective link bytes) to full depth."""
+
+    def extract(p):
+        from repro.analysis.hlo import total_link_bytes
+
+        return {
+            "flops": p["cost"]["flops"],
+            "bytes": p["cost"]["bytes_accessed"],
+            "coll": total_link_bytes(p["collectives"]),
+        }
+
+    a = extract(probes["a"])
+    b = extract(probes["b"])
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        if fam in ("dense", "moe", "ssm"):
+            per_layer = b[key] - a[key]
+            out[key] = a[key] + (info["layers"] - 1) * per_layer
+        elif fam == "vlm":
+            per_group = b[key] - a[key]
+            out[key] = a[key] + (info["groups"] - 1) * per_group
+        elif fam == "hybrid":
+            per_group = b[key] - a[key]
+            out[key] = a[key] + (info["groups"] - 1) * per_group
+            if info["rem"]:
+                c = extract(probes["c"])
+                out[key] += c[key] - a[key]
+        elif fam == "encdec":
+            c = extract(probes["c"])
+            per_enc = b[key] - a[key]
+            per_dec = c[key] - a[key]
+            out[key] = a[key] + (info["enc"] - 1) * per_enc + (info["dec"] - 1) * per_dec
+        else:
+            raise ValueError(fam)
+    return out
+
+
+def _parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def run_cell(
+    arch: str, shape_name: str, mesh_kind: str, probes: bool = True,
+    overrides: Optional[Dict] = None, skip_production: bool = False,
+) -> Dict:
+    from repro.configs.base import SHAPE_BY_NAME
+    from repro.configs.registry import get_config
+    from repro.launch import specs as S
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPE_BY_NAME[shape_name]
+    ok, why = S.shape_applicable(cfg, shape)
+    result: Dict = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if not ok:
+        result["skipped"] = why
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    with mesh, jax.set_mesh(mesh):
+        if not skip_production:
+            cell = S.build_cell(cfg, shape, mesh)
+            result["production"] = _compile_cell(cell)
+
+        if probes and mesh_kind == "single":
+            probe_cfgs, info = _probe_cfgs(cfg)
+            probe_results = {}
+            for name, pcfg in probe_cfgs.items():
+                pcell = S.build_cell(pcfg, shape, mesh)
+                probe_results[name] = _compile_cell(pcell)
+            result["probes"] = probe_results
+            result["scaled_cost"] = _scale_costs(cfg.family, probe_results, info)
+            result["probe_info"] = info
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable)")
+    ap.add_argument("--skip-production", action="store_true",
+                    help="probes only (fast §Perf iteration)")
+    args = ap.parse_args()
+
+    if args.all:
+        # Subprocess per cell: isolates compiler memory, survives one bad cell.
+        from repro.configs.base import SHAPES
+        from repro.configs.registry import ARCH_IDS
+
+        os.makedirs(args.out_dir, exist_ok=True)
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        failures = []
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mesh_kind in meshes:
+                    out = os.path.join(
+                        args.out_dir, f"{arch}__{shape.name}__{mesh_kind}.json"
+                    )
+                    if os.path.exists(out):
+                        print(f"[skip] {out} exists", flush=True)
+                        continue
+                    cmd = [
+                        sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", arch, "--shape", shape.name,
+                        "--mesh", mesh_kind, "--out", out,
+                    ]
+                    if args.no_probes:
+                        cmd.append("--no-probes")
+                    print(f"[run ] {arch} x {shape.name} x {mesh_kind}", flush=True)
+                    rc = subprocess.run(cmd).returncode
+                    if rc != 0:
+                        failures.append((arch, shape.name, mesh_kind))
+                        print(f"[FAIL] {arch} x {shape.name} x {mesh_kind}", flush=True)
+        print(f"done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    t0 = time.perf_counter()
+    try:
+        overrides = dict(_parse_override(kv) for kv in args.set)
+        res = run_cell(args.arch, args.shape, args.mesh,
+                       probes=not args.no_probes, overrides=overrides,
+                       skip_production=args.skip_production)
+    except Exception:
+        res = {
+            "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+            "error": traceback.format_exc(),
+        }
+    res["wall_s"] = time.perf_counter() - t0
+    blob = json.dumps(res, indent=1, default=float)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(blob)
+    print(blob[:2000])
+    if "error" in res:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

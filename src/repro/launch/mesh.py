@@ -1,0 +1,35 @@
+"""Production meshes.
+
+A v5e pod is 16x16 = 256 chips; the multi-pod run is 2 pods = 512.  The
+``pod`` axis is the DCN-crossing dimension: only batch (data parallelism)
+is sharded over it, so cross-pod traffic is one gradient all-reduce per
+step while all tensor-parallel collectives stay on intra-pod ICI.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (dry-run only)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_smoke_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny mesh for CPU integration tests (8 forced host devices)."""
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -1,0 +1,250 @@
+"""Attention: MHA/GQA/MQA with RoPE, sliding window, KV cache, cross-attn.
+
+Three entry points:
+  * ``attend_full``   — training / prefill self-attention (causal or not).
+  * ``attend_decode`` — one-step decode against a (possibly model-axis-
+                        sharded) KV cache; masking by position.
+  * ``attend_cross``  — decoder->encoder / text->image cross attention.
+
+The XLA path keeps logits in fp32 and relies on GSPMD to shard the einsums;
+`repro.kernels.attention` provides the Pallas flash path for real TPUs
+(wired via ``use_flash`` in apply-time options).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, cast
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, d_model: Optional[int] = None) -> Dict:
+    d = d_model or cfg.d_model
+    dh = cfg.head_dim
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "w_q": jax.random.normal(kq, (d, cfg.n_heads * dh), jnp.float32) * s,
+        "w_k": jax.random.normal(kk, (d, cfg.n_kv_heads * dh), jnp.float32) * s,
+        "w_v": jax.random.normal(kv, (d, cfg.n_kv_heads * dh), jnp.float32) * s,
+        "w_o": jax.random.normal(ko, (cfg.n_heads * dh, d), jnp.float32)
+        / np.sqrt(cfg.n_heads * dh),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((cfg.n_heads * dh,), jnp.float32)
+        p["b_k"] = jnp.zeros((cfg.n_kv_heads * dh,), jnp.float32)
+        p["b_v"] = jnp.zeros((cfg.n_kv_heads * dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    q = x @ cast(params["w_q"], dt)
+    k = x @ cast(params["w_k"], dt)
+    v = x @ cast(params["w_v"], dt)
+    if cfg.qkv_bias:
+        q = q + cast(params["b_q"], dt)
+        k = k + cast(params["b_k"], dt)
+        v = v + cast(params["b_v"], dt)
+    q = q.reshape(b, s, cfg.n_heads, dh)
+    k = k.reshape(b, s, cfg.n_kv_heads, dh)
+    v = v.reshape(b, s, cfg.n_kv_heads, dh)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,Hq,D), k: (B,T,Hkv,D) -> logits (B,Hkv,G,S,T) grouped."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+
+
+def _gqa_out(p, v, b, s, hq, d):
+    hkv = v.shape[2]
+    g = hq // hkv
+    o = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return o.reshape(b, s, hq * d)
+
+
+# Above this sequence length, the XLA path switches to the chunked
+# (flash-style, online-softmax) formulation so S x S logits never
+# materialize.  Tunable per-run (hillclimb knob).
+CHUNKED_ATTN_THRESHOLD = 2048
+Q_BLOCK = 512
+KV_BLOCK = 1024
+
+
+def _attend_chunked(q, k, v, cfg: ModelConfig, causal: bool):
+    """Flash-style attention in pure jnp: double scan over q/kv blocks with
+    online softmax.  Positions are assumed to be arange(S) (all callers).
+
+    q: (B,S,Hq,D); k/v: (B,S,Hkv,D) -> (B,S,Hq,D) in q.dtype.
+    Both scan bodies are rematted so the backward pass recomputes block
+    logits instead of storing them (the flash backward tradeoff).
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qb = min(Q_BLOCK, s)
+    kb = min(KV_BLOCK, s)
+    assert s % qb == 0 and s % kb == 0, (s, qb, kb)
+    nq, nk = s // qb, s // kb
+    scale = 1.0 / np.sqrt(d)
+
+    qg = q.reshape(b, nq, qb, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+    kr = k.reshape(b, nk, kb, hkv, d).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, kb, hkv, d).transpose(1, 0, 2, 3, 4)
+    window = cfg.sliding_window
+
+    def kv_step(carry, xs):
+        acc, m, l, q_blk, qi = carry
+        k_blk, v_blk, kj = xs
+        logits = (
+            jnp.einsum("bqkgd,btkd->bkgqt", q_blk, k_blk).astype(jnp.float32) * scale
+        )  # (B,Hkv,G,qb,kb)
+        qpos = qi * qb + jnp.arange(qb)[:, None]
+        kpos = kj * kb + jnp.arange(kb)[None, :]
+        mask = jnp.ones((qb, kb), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqt,btkd->bkgqd", p.astype(v_blk.dtype), v_blk
+        ).astype(jnp.float32)
+        return (acc, m_new, l, q_blk, qi), None
+
+    def q_step(_, xs):
+        q_blk, qi = xs
+        acc0 = jnp.zeros((b, hkv, g, qb, d), jnp.float32)
+        m0 = jnp.full((b, hkv, g, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qb), jnp.float32)
+        (acc, m, l, _, _), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (acc0, m0, l0, q_blk, qi),
+            (kr, vr, jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B,Hkv,G,qb,D) -> (B,qb,Hq,D)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, qb, hq, d)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, (qg, jnp.arange(nq)))
+    # (nq, B, qb, Hq, D) -> (B, S, Hq, D)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, d)
+
+
+def attend_full(
+    params,
+    x,
+    cfg: ModelConfig,
+    positions=None,
+    causal: bool = True,
+    use_rope: bool = True,
+    return_kv: bool = False,
+):
+    """Self-attention over full sequences (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    if use_rope and cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if s >= CHUNKED_ATTN_THRESHOLD and not cfg.force_dense_attn:
+        o = _attend_chunked(q, k, v, cfg, causal).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    else:
+        scale = 1.0 / np.sqrt(cfg.head_dim)
+        logits = _gqa_scores(q, k) * scale  # (B,Hkv,G,S,T)
+        qi = positions[:, None, None, :, None]
+        ki = positions[:, None, None, None, :]
+        mask = jnp.ones((b, 1, 1, s, s), bool)
+        if causal:
+            mask &= ki <= qi
+        if cfg.sliding_window is not None:
+            mask &= ki > qi - cfg.sliding_window
+        logits = jnp.where(mask, logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        o = _gqa_out(p, v, b, s, cfg.n_heads, cfg.head_dim)
+    out = o @ cast(params["w_o"], x.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype: str):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, jnp.dtype(dtype)),
+        "v": jnp.zeros(shape, jnp.dtype(dtype)),
+    }
+
+
+def attend_decode(
+    params,
+    x,            # (B, 1, D)
+    cache: Dict,  # {"k","v"}: (B, T, Hkv, Dh)
+    pos,          # scalar int32 — current position
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode: update cache at ``pos``, attend over prefix."""
+    b = x.shape[0]
+    dh = cfg.head_dim
+    q, k_new, v_new = _project_qkv(params, x, cfg)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.pos_embed == "rope":
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k_new = apply_rope(k_new, posb, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    t = k.shape[1]
+    scale = 1.0 / np.sqrt(dh)
+    logits = _gqa_scores(q, k) * scale  # (B,Hkv,G,1,T)
+    ki = jnp.arange(t)[None, None, None, None, :]
+    mask = ki <= pos
+    if cfg.sliding_window is not None:
+        mask &= ki > pos - cfg.sliding_window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = _gqa_out(p, v, b, 1, cfg.n_heads, dh)
+    out = o @ cast(params["w_o"], x.dtype)
+    return out, {"k": k, "v": v}
+
+
+def cross_attn_init(key, cfg: ModelConfig) -> Dict:
+    return attn_init(key, cfg)
+
+
+def attend_cross(params, x, context, cfg: ModelConfig) -> jnp.ndarray:
+    """x: (B,S,D) queries; context: (B,T,D) keys/values (no masking)."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    t = context.shape[1]
+    dh = cfg.head_dim
+    q = (x @ cast(params["w_q"], dt)).reshape(b, s, cfg.n_heads, dh)
+    k = (context @ cast(params["w_k"], dt)).reshape(b, t, cfg.n_kv_heads, dh)
+    v = (context @ cast(params["w_v"], dt)).reshape(b, t, cfg.n_kv_heads, dh)
+    if cfg.qkv_bias:
+        q = q + cast(params["b_q"], dt).reshape(cfg.n_heads, dh)
+        k = k + cast(params["b_k"], dt).reshape(cfg.n_kv_heads, dh)
+        v = v + cast(params["b_v"], dt).reshape(cfg.n_kv_heads, dh)
+    scale = 1.0 / np.sqrt(dh)
+    logits = _gqa_scores(q, k) * scale
+    p = jax.nn.softmax(logits, axis=-1)
+    o = _gqa_out(p, v, b, s, cfg.n_heads, dh)
+    return o @ cast(params["w_o"], dt)

@@ -1,0 +1,167 @@
+"""Block composition: pre-norm residual blocks for every assigned family.
+
+Block types:
+  * ``attn_mlp``  — self-attention + MLP (dense / the shared Zamba block)
+  * ``moe``       — self-attention + MoE MLP
+  * ``cross``     — cross-attention (+MLP) for VLM / enc-dec decoder
+  * ``mamba``     — Mamba-2 SSD block (single residual)
+
+Each has init / apply / decode variants operating on one layer's params;
+stacking and scanning lives in `model.py`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+
+
+# ------------------------------------------------------------- attn + mlp ---
+def attn_mlp_init(key, cfg: ModelConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_attn": rmsnorm_init(cfg.d_model),
+        "attn": attn.attn_init(k1, cfg),
+        "ln_mlp": rmsnorm_init(cfg.d_model),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type),
+    }
+
+
+def attn_mlp_apply(params, x, cfg: ModelConfig, positions=None, causal=True,
+                   return_kv=False):
+    res = attn.attend_full(params["attn"], rmsnorm(params["ln_attn"], x), cfg,
+                           positions=positions, causal=causal, return_kv=return_kv)
+    h, kv = res if return_kv else (res, None)
+    x = x + h
+    h = mlp_apply(params["mlp"], rmsnorm(params["ln_mlp"], x), cfg.mlp_type)
+    x = x + h
+    return (x, kv) if return_kv else x
+
+
+def attn_mlp_decode(params, x, cache, pos, cfg: ModelConfig):
+    h, cache = attn.attend_decode(
+        params["attn"], rmsnorm(params["ln_attn"], x), cache, pos, cfg
+    )
+    x = x + h
+    h = mlp_apply(params["mlp"], rmsnorm(params["ln_mlp"], x), cfg.mlp_type)
+    return x + h, cache
+
+
+# ------------------------------------------------------------------- moe ---
+def moe_block_init(key, cfg: ModelConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln_attn": rmsnorm_init(cfg.d_model),
+        "attn": attn.attn_init(k1, cfg),
+        "ln_mlp": rmsnorm_init(cfg.d_model),
+        "moe": moe_mod.moe_init(k2, cfg),
+    }
+
+
+def moe_block_apply(params, x, cfg: ModelConfig, positions=None, return_kv=False):
+    res = attn.attend_full(params["attn"], rmsnorm(params["ln_attn"], x), cfg,
+                           positions=positions, causal=True, return_kv=return_kv)
+    h, kv = res if return_kv else (res, None)
+    x = x + h
+    h, aux = moe_mod.moe_apply(params["moe"], rmsnorm(params["ln_mlp"], x), cfg)
+    x = x + h
+    return (x, aux, kv) if return_kv else (x, aux)
+
+
+def moe_block_decode(params, x, cache, pos, cfg: ModelConfig):
+    h, cache = attn.attend_decode(
+        params["attn"], rmsnorm(params["ln_attn"], x), cache, pos, cfg
+    )
+    x = x + h
+    h = moe_mod.moe_apply_decode(params["moe"], rmsnorm(params["ln_mlp"], x), cfg)
+    return x + h, cache
+
+
+# ------------------------------------------------- cross-attention blocks ---
+def cross_block_init(key, cfg: ModelConfig, with_mlp: bool = True) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln_x": rmsnorm_init(cfg.d_model),
+        "cross": attn.cross_attn_init(k1, cfg),
+    }
+    if with_mlp:
+        p["ln_mlp"] = rmsnorm_init(cfg.d_model)
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    return p
+
+
+def cross_block_apply(params, x, context, cfg: ModelConfig):
+    h = attn.attend_cross(params["cross"], rmsnorm(params["ln_x"], x), context, cfg)
+    x = x + h
+    if "mlp" in params:
+        h = mlp_apply(params["mlp"], rmsnorm(params["ln_mlp"], x), cfg.mlp_type)
+        x = x + h
+    return x
+
+
+def cross_block_decode_cached(params, x, ck, cv, cfg: ModelConfig):
+    """Cross-attn with precomputed context K/V (B, T, Hkv, Dh)."""
+    import numpy as np
+
+    dt = x.dtype
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    from repro.models.layers import cast
+
+    xq = rmsnorm(params["ln_x"], x)
+    q = (xq @ cast(params["cross"]["w_q"], dt)).reshape(b, s, cfg.n_heads, dh)
+    if cfg.qkv_bias:
+        q = q + cast(params["cross"]["b_q"], dt).reshape(cfg.n_heads, dh)
+    logits = attn._gqa_scores(q, ck) / np.sqrt(dh)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = attn._gqa_out(p, cv, b, s, cfg.n_heads, dh)
+    x = x + o @ cast(params["cross"]["w_o"], dt)
+    if "mlp" in params:
+        h = mlp_apply(params["mlp"], rmsnorm(params["ln_mlp"], x), cfg.mlp_type)
+        x = x + h
+    return x
+
+
+def cross_context_kv(params, context, cfg: ModelConfig):
+    """Precompute cross-attn K/V from context (prefill-time, cached)."""
+    from repro.models.layers import cast
+
+    dt = context.dtype
+    b, t, _ = context.shape
+    dh = cfg.head_dim
+    k = (context @ cast(params["cross"]["w_k"], dt)).reshape(b, t, cfg.n_kv_heads, dh)
+    v = (context @ cast(params["cross"]["w_v"], dt)).reshape(b, t, cfg.n_kv_heads, dh)
+    if cfg.qkv_bias:
+        k = k + cast(params["cross"]["b_k"], dt).reshape(cfg.n_kv_heads, dh)
+        v = v + cast(params["cross"]["b_v"], dt).reshape(cfg.n_kv_heads, dh)
+    return k, v
+
+
+# ----------------------------------------------------------------- mamba ---
+def mamba_block_init(key, cfg: ModelConfig) -> Dict:
+    return {
+        "ln": rmsnorm_init(cfg.d_model),
+        "mamba": ssm_mod.mamba2_init(key, cfg),
+    }
+
+
+def mamba_block_apply(params, x, cfg: ModelConfig, return_state=False):
+    if return_state:
+        h, st = ssm_mod.mamba2_apply(
+            params["mamba"], rmsnorm(params["ln"], x), cfg, return_state=True
+        )
+        return x + h, st
+    return x + ssm_mod.mamba2_apply(params["mamba"], rmsnorm(params["ln"], x), cfg)
+
+
+def mamba_block_decode(params, x, state, cfg: ModelConfig):
+    h, state = ssm_mod.mamba2_decode(params["mamba"], rmsnorm(params["ln"], x), state, cfg)
+    return x + h, state

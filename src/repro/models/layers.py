@@ -1,0 +1,112 @@
+"""Elementary layers: norms, RoPE/sinusoidal positions, MLP variants, embeds.
+
+Pure functions over param dicts.  Compute dtype is cfg.dtype (bf16 on TPU);
+master params stay fp32 and are cast at use ("cast-on-use" mixed precision).
+Initializers follow common practice (trunc-normal 0.02 / scaled by fan-in).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cast(x, dtype: str):
+    return x.astype(jnp.dtype(dtype))
+
+
+# ----------------------------------------------------------------- norms ---
+def rmsnorm_init(d: int) -> Dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dt)
+
+
+# ------------------------------------------------------------- positions ---
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S). Rotates pairs (even, odd)."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_frequencies(d, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d_model: int):
+    """Classic transformer sinusoids. positions: (..., S) -> (..., S, D)."""
+    half = d_model // 2
+    freq = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------------------------------------------------- mlp ---
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    p = {
+        "w_up": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k2, (d_ff, d_model), jnp.float32) * s_out,
+    }
+    if mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = jax.random.normal(k3, (d_model, d_ff), jnp.float32) * s_in
+    return p
+
+
+def mlp_apply(params, x, mlp_type: str):
+    dt = x.dtype
+    up = x @ cast(params["w_up"], dt)
+    if mlp_type == "swiglu":
+        g = x @ cast(params["w_gate"], dt)
+        h = jax.nn.silu(g) * up
+    elif mlp_type == "geglu":
+        g = x @ cast(params["w_gate"], dt)
+        h = jax.nn.gelu(g, approximate=True) * up
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(mlp_type)
+    return h @ cast(params["w_down"], dt)
+
+
+# ------------------------------------------------------------ embeddings ---
+def embed_init(key, vocab: int, d_model: int, tie: bool) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": jax.random.normal(k1, (vocab, d_model), jnp.float32) * 0.02}
+    if not tie:
+        p["unembed"] = (
+            jax.random.normal(k2, (vocab, d_model), jnp.float32) / np.sqrt(d_model)
+        )
+    return p
+
+
+def embed_apply(params, tokens, dtype: str):
+    return cast(params["embedding"], dtype)[tokens]
+
+
+def unembed_apply(params, x, softcap: Optional[float] = None):
+    table = params.get("unembed", params["embedding"])
+    logits = (x @ cast(table, x.dtype).T).astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

@@ -1,0 +1,603 @@
+"""Model assembly: every assigned architecture behind one interface.
+
+`LM(cfg)` exposes:
+
+  init(rng)                               -> params (fp32 masters)
+  loss(params, batch)                     -> scalar train loss
+  prefill(params, batch, max_len)         -> (last logits, kv/ssm cache)
+  decode_step(params, cache, token, pos)  -> (logits, cache)
+  init_cache(batch_size, max_len)         -> zeroed cache pytree (dry-run)
+
+Layer stacks are scanned (`jax.lax.scan` over stacked param pytrees) with
+optional per-block remat — one HLO instance per block type regardless of
+depth, which is what keeps the 512-way dry-run compile tractable.
+
+batch dict keys:
+  tokens (B,S) int32; labels (B,S) int32  (next-token targets)
+  enc_frames (B,Tenc,D)  — whisper stub frontend output
+  img_embeds (B,Timg,D)  — llama-vision stub frontend output
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import blocks as B
+from repro.models.layers import (
+    cast,
+    embed_apply,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    sinusoidal_positions,
+    unembed_apply,
+)
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def _stack_init(init_fn, key, n: int):
+    """Initialize ``n`` layers and stack leaves on axis 0 (for lax.scan)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _group_tree(tree, groups: int, per: int):
+    """Reshape stacked layer tree (G*P, ...) -> (G, P, ...)."""
+    return jax.tree.map(lambda x: x.reshape((groups, per) + x.shape[1:]), tree)
+
+
+def _shard_seq(x, cfg: ModelConfig):
+    """Sequence-parallel constraint (Korthikanti et al.): pin the residual
+    stream to (batch-axes, "model", None) between blocks so GSPMD turns the
+    TP all-reduces into reduce-scatter + all-gather pairs (half the bytes;
+    norms/pointwise work also shards over the model axis)."""
+    if not (cfg.seq_shard_activations and cfg.act_shard_axes):
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(
+        x, P(tuple(cfg.act_shard_axes), "model", None)
+    )
+
+
+def _scan_blocks(body, carry, xs, cfg: ModelConfig):
+    """lax.scan over stacked layers, or an unrolled Python loop when
+    ``cfg.scan_layers`` is False (used by the dry-run cost probes, where
+    while-loop bodies would be counted once by HloCostAnalysis)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xs_i = jax.tree.map(lambda x: x[i], xs)
+        carry, y = body(carry, xs_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- init ---
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        k_emb, k_layers, k_extra, k_enc = jax.random.split(rng, 4)
+        params: Dict = {
+            "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings),
+            "ln_f": rmsnorm_init(cfg.d_model),
+        }
+        fam = cfg.family
+        if fam == "dense":
+            params["blocks"] = _stack_init(
+                lambda k: B.attn_mlp_init(k, cfg), k_layers, cfg.n_layers
+            )
+        elif fam == "moe":
+            params["blocks"] = _stack_init(
+                lambda k: B.moe_block_init(k, cfg), k_layers, cfg.n_layers
+            )
+        elif fam == "ssm":
+            params["blocks"] = _stack_init(
+                lambda k: B.mamba_block_init(k, cfg), k_layers, cfg.n_layers
+            )
+        elif fam == "hybrid":
+            groups = cfg.n_layers // cfg.shared_attn_period
+            rem = cfg.n_layers - groups * cfg.shared_attn_period
+            params["blocks"] = _stack_init(
+                lambda k: B.mamba_block_init(k, cfg), k_layers,
+                groups * cfg.shared_attn_period,
+            )
+            if rem:
+                params["tail"] = _stack_init(
+                    lambda k: B.mamba_block_init(k, cfg), k_enc, rem
+                )
+            params["shared_attn"] = B.attn_mlp_init(k_extra, cfg)
+        elif fam == "encdec":
+            params["encoder"] = _stack_init(
+                lambda k: B.attn_mlp_init(k, cfg), k_enc, cfg.n_encoder_layers
+            )
+            params["ln_enc"] = rmsnorm_init(cfg.d_model)
+            params["blocks"] = _stack_init(
+                lambda k: self._encdec_block_init(k), k_layers, cfg.n_layers
+            )
+        elif fam == "vlm":
+            groups = cfg.n_layers // cfg.cross_attn_period
+            params["blocks"] = _stack_init(
+                lambda k: B.attn_mlp_init(k, cfg), k_layers, cfg.n_layers
+            )
+            params["cross_blocks"] = _stack_init(
+                lambda k: B.cross_block_init(k, cfg, with_mlp=False), k_extra, groups
+            )
+        else:
+            raise ValueError(fam)
+        return params
+
+    def _encdec_block_init(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        p = B.attn_mlp_init(k1, cfg)
+        p.update(
+            {"ln_cross": rmsnorm_init(cfg.d_model), "cross": attn.cross_attn_init(k2, cfg)}
+        )
+        return p
+
+    # ---------------------------------------------------------- helpers ---
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = embed_apply(params["embed"], tokens, cfg.dtype)
+        if cfg.embed_scale:
+            x = x * np.sqrt(cfg.d_model).astype(np.float32)
+        if cfg.pos_embed == "sinusoidal":
+            s = tokens.shape[-1]
+            pos = sinusoidal_positions(jnp.arange(s), cfg.d_model)
+            x = x + pos.astype(x.dtype)
+        return x
+
+    def _encode(self, params, enc_frames):
+        """Whisper encoder over stubbed conv-frontend output (B,Tenc,D)."""
+        cfg = self.cfg
+        x = enc_frames.astype(jnp.dtype(cfg.dtype))
+        pos = sinusoidal_positions(jnp.arange(x.shape[1]), cfg.d_model)
+        x = x + pos.astype(x.dtype)
+
+        def body(h, lp):
+            return B.attn_mlp_apply(lp, h, cfg, causal=False), None
+
+        body = _maybe_remat(body, cfg)
+        x, _ = _scan_blocks(body, x, params["encoder"], cfg)
+        return rmsnorm(params["ln_enc"], x)
+
+    # ------------------------------------------------------------ train ---
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full teacher-forced forward -> (logits fp32 (B,S,V), aux loss)."""
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"])
+        aux = jnp.zeros((), jnp.float32)
+        fam = cfg.family
+
+        if fam == "dense":
+            def body(h, lp):
+                return _shard_seq(B.attn_mlp_apply(lp, h, cfg), cfg), None
+            x, _ = _scan_blocks(_maybe_remat(body, cfg), x, params["blocks"], cfg)
+
+        elif fam == "moe":
+            def body(carry, lp):
+                h, a = carry
+                h, aux_l = B.moe_block_apply(lp, h, cfg)
+                return (h, a + aux_l), None
+            (x, aux), _ = _scan_blocks(
+                _maybe_remat(body, cfg), (x, aux), params["blocks"], cfg)
+
+        elif fam == "ssm":
+            def body(h, lp):
+                return B.mamba_block_apply(lp, h, cfg), None
+            x, _ = _scan_blocks(_maybe_remat(body, cfg), x, params["blocks"], cfg)
+
+        elif fam == "hybrid":
+            per = cfg.shared_attn_period
+            groups = cfg.n_layers // per
+            grouped = _group_tree(params["blocks"], groups, per)
+            shared = params["shared_attn"]
+
+            def group_body(h, gp):
+                def inner(hh, lp):
+                    return B.mamba_block_apply(lp, hh, cfg), None
+                h, _ = _scan_blocks(inner, h, gp, cfg)
+                h = B.attn_mlp_apply(shared, h, cfg)
+                return h, None
+
+            x, _ = _scan_blocks(_maybe_remat(group_body, cfg), x, grouped, cfg)
+            if "tail" in params:
+                def tail_body(h, lp):
+                    return B.mamba_block_apply(lp, h, cfg), None
+                x, _ = _scan_blocks(tail_body, x, params["tail"], cfg)
+
+        elif fam == "encdec":
+            ctx = self._encode(params, batch["enc_frames"])
+
+            def body(h, lp):
+                h = h + attn.attend_full(
+                    lp["attn"], rmsnorm(lp["ln_attn"], h), cfg, causal=True,
+                    use_rope=False,
+                )
+                h = B.cross_block_apply(
+                    {"ln_x": lp["ln_cross"], "cross": lp["cross"]}, h, ctx, cfg
+                )
+                from repro.models.layers import mlp_apply
+                h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln_mlp"], h), cfg.mlp_type)
+                return h, None
+
+            x, _ = _scan_blocks(_maybe_remat(body, cfg), x, params["blocks"], cfg)
+
+        elif fam == "vlm":
+            per = cfg.cross_attn_period
+            groups = cfg.n_layers // per
+            grouped = _group_tree(params["blocks"], groups, per)
+            ctx = batch["img_embeds"].astype(x.dtype)
+
+            def group_body(h, xs):
+                gp, cp = xs
+                def inner(hh, lp):
+                    return B.attn_mlp_apply(lp, hh, cfg), None
+                h, _ = _scan_blocks(inner, h, gp, cfg)
+                h = B.cross_block_apply(cp, h, ctx, cfg)
+                return h, None
+
+            x, _ = _scan_blocks(
+                _maybe_remat(group_body, cfg), x, (grouped, params["cross_blocks"]), cfg)
+        else:
+            raise ValueError(fam)
+
+        x = rmsnorm(params["ln_f"], x)
+        logits = unembed_apply(params["embed"], x, cfg.logit_softcap)
+        return logits, aux
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return loss + AUX_LOSS_WEIGHT * aux
+
+    # ---------------------------------------------------------- serving ---
+    def init_cache(self, batch_size: int, max_len: int) -> Dict:
+        cfg = self.cfg
+        dt = cfg.dtype
+        fam = cfg.family
+        dh = cfg.head_dim
+        kv_shape = (batch_size, max_len, cfg.n_kv_heads, dh)
+
+        def kv_stack(n):
+            return {
+                "k": jnp.zeros((n,) + kv_shape, jnp.dtype(dt)),
+                "v": jnp.zeros((n,) + kv_shape, jnp.dtype(dt)),
+            }
+
+        if fam in ("dense", "moe"):
+            return kv_stack(cfg.n_layers)
+        if fam == "ssm":
+            from repro.models.ssm import init_ssm_state
+            st = init_ssm_state(cfg, batch_size, dt)
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), st
+            )
+        if fam == "hybrid":
+            from repro.models.ssm import init_ssm_state
+            per = cfg.shared_attn_period
+            groups = cfg.n_layers // per
+            rem = cfg.n_layers - groups * per
+            st = init_ssm_state(cfg, batch_size, dt)
+            cache = {
+                "mamba": jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (groups * per,) + x.shape), st
+                ),
+                "shared": kv_stack(groups),
+            }
+            if rem:
+                cache["tail"] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (rem,) + x.shape), st
+                )
+            return cache
+        if fam == "encdec":
+            c = kv_stack(cfg.n_layers)
+            tenc = cfg.encoder_seq
+            c["cross_k"] = jnp.zeros(
+                (cfg.n_layers, batch_size, tenc, cfg.n_kv_heads, dh), jnp.dtype(dt)
+            )
+            c["cross_v"] = jnp.zeros_like(c["cross_k"])
+            return c
+        if fam == "vlm":
+            groups = cfg.n_layers // cfg.cross_attn_period
+            c = kv_stack(cfg.n_layers)
+            c["cross_k"] = jnp.zeros(
+                (groups, batch_size, cfg.n_image_tokens, cfg.n_kv_heads, dh),
+                jnp.dtype(dt),
+            )
+            c["cross_v"] = jnp.zeros_like(c["cross_k"])
+            return c
+        raise ValueError(fam)
+
+    def prefill(self, params, batch, max_len: int) -> Tuple[jnp.ndarray, Dict]:
+        """Teacher-forced pass that also fills the serving cache."""
+        cfg = self.cfg
+        fam = cfg.family
+        tokens = batch["tokens"]
+        bsz, s = tokens.shape
+        x = self._embed(params, tokens)
+        cache = self.init_cache(bsz, max_len)
+
+        def pad_kv(kv):
+            k, v = kv
+            pad = max_len - s
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return k.astype(jnp.dtype(cfg.dtype)), v.astype(jnp.dtype(cfg.dtype))
+
+        if fam in ("dense", "moe"):
+            def body(h, lp):
+                if fam == "dense":
+                    h, kv = B.attn_mlp_apply(lp, h, cfg, return_kv=True)
+                else:
+                    h, _aux, kv = B.moe_block_apply(lp, h, cfg, return_kv=True)
+                return h, pad_kv(kv)
+            x, (ks, vs) = _scan_blocks(_maybe_remat(body, cfg), x, params["blocks"], cfg)
+            cache = {"k": ks, "v": vs}
+
+        elif fam == "ssm":
+            # Run the train path for logits; rebuild final states by replaying
+            # the recurrence on the last conv_width tokens is equivalent only
+            # for conv; the SSM state needs the full scan — use decode-free
+            # prefill: chunked apply returns states via a second pass.
+            x, cache = self._ssm_prefill(params, x, cache)
+
+        elif fam == "hybrid":
+            x, cache = self._hybrid_prefill(params, x, cache)
+
+        elif fam == "encdec":
+            ctx = self._encode(params, batch["enc_frames"])
+
+            # explicit loop body (self + cross + mlp), collecting both caches
+            def body2(h, lp):
+                hself, kv = attn.attend_full(
+                    lp["attn"], rmsnorm(lp["ln_attn"], h), cfg, causal=True,
+                    use_rope=False, return_kv=True,
+                )
+                h = h + hself
+                h = B.cross_block_apply(
+                    {"ln_x": lp["ln_cross"], "cross": lp["cross"]}, h, ctx, cfg
+                )
+                from repro.models.layers import mlp_apply
+                h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln_mlp"], h), cfg.mlp_type)
+                ck, cv = B.cross_context_kv(lp, ctx, cfg)
+                return h, (pad_kv(kv), (ck, cv))
+            x, (kvs, cross) = _scan_blocks(_maybe_remat(body2, cfg), x, params["blocks"], cfg)
+            cache = {
+                "k": kvs[0], "v": kvs[1],
+                "cross_k": cross[0], "cross_v": cross[1],
+            }
+
+        elif fam == "vlm":
+            per = cfg.cross_attn_period
+            groups = cfg.n_layers // per
+            grouped = _group_tree(params["blocks"], groups, per)
+            ctx = batch["img_embeds"].astype(x.dtype)
+
+            def group_body(h, xs):
+                gp, cp = xs
+                def inner(hh, lp):
+                    hh, kv = B.attn_mlp_apply(lp, hh, cfg, return_kv=True)
+                    return hh, pad_kv(kv)
+                h, kvs = _scan_blocks(inner, h, gp, cfg)
+                h = B.cross_block_apply(cp, h, ctx, cfg)
+                ck, cv = B.cross_context_kv(cp, ctx, cfg)
+                return h, (kvs, (ck, cv))
+            x, (kvs, cross) = _scan_blocks(
+                _maybe_remat(group_body, cfg), x, (grouped, params["cross_blocks"]), cfg)
+            ks = kvs[0].reshape((cfg.n_layers,) + kvs[0].shape[2:])
+            vs = kvs[1].reshape((cfg.n_layers,) + kvs[1].shape[2:])
+            cache = {"k": ks, "v": vs, "cross_k": cross[0], "cross_v": cross[1]}
+        else:
+            raise ValueError(fam)
+
+        x = rmsnorm(params["ln_f"], x)
+        logits = unembed_apply(params["embed"], x[:, -1:], cfg.logit_softcap)
+        return logits[:, 0], cache
+
+    def _ssm_prefill(self, params, x, cache):
+        cfg = self.cfg
+        del cache  # rebuilt from scratch below
+
+        def body(h, lp):
+            h, st = B.mamba_block_apply(lp, h, cfg, return_state=True)
+            return h, (st["conv"].astype(jnp.dtype(cfg.dtype)), st["ssm"])
+
+        x, (convs, ssms) = _scan_blocks(_maybe_remat(body, cfg), x, params["blocks"], cfg)
+        return x, {"conv": convs, "ssm": ssms}
+
+    def _hybrid_prefill(self, params, x, cache):
+        cfg = self.cfg
+        per = cfg.shared_attn_period
+        groups = cfg.n_layers // per
+        grouped = _group_tree(params["blocks"], groups, per)
+        shared = params["shared_attn"]
+        max_len = cache["shared"]["k"].shape[2]
+        s = x.shape[1]
+
+        def group_body(h, gp):
+            def inner(hh, lp):
+                hh, st = B.mamba_block_apply(lp, hh, cfg, return_state=True)
+                return hh, (st["conv"].astype(jnp.dtype(cfg.dtype)), st["ssm"])
+
+            h, (convs, ssms) = _scan_blocks(inner, h, gp, cfg)
+            h, kv = B.attn_mlp_apply(shared, h, cfg, return_kv=True)
+            k, v = kv
+            k = jnp.pad(k, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, max_len - s), (0, 0), (0, 0)))
+            return h, ((convs, ssms), (k.astype(jnp.dtype(cfg.dtype)), v.astype(jnp.dtype(cfg.dtype))))
+
+        x, (mstates, kvs) = _scan_blocks(_maybe_remat(group_body, cfg), x, grouped, cfg)
+        new_cache = {
+            "mamba": {
+                "conv": mstates[0].reshape((groups * per,) + mstates[0].shape[2:]),
+                "ssm": mstates[1].reshape((groups * per,) + mstates[1].shape[2:]),
+            },
+            "shared": {"k": kvs[0], "v": kvs[1]},
+        }
+        if "tail" in params:
+            def tail_body(h, lp):
+                h, st = B.mamba_block_apply(lp, h, cfg, return_state=True)
+                return h, (st["conv"].astype(jnp.dtype(cfg.dtype)), st["ssm"])
+            x, (tc, ts) = _scan_blocks(tail_body, x, params["tail"], cfg)
+            new_cache["tail"] = {"conv": tc, "ssm": ts}
+        return x, new_cache
+
+    # ------------------------------------------------------ decode step ---
+    def decode_step(self, params, cache, token, pos):
+        """token: (B, 1) int32; pos: scalar int32. Returns (logits (B,V), cache)."""
+        cfg = self.cfg
+        fam = cfg.family
+        x = self._embed_decode(params, token, pos)
+
+        if fam in ("dense", "moe"):
+            def body(h, xs):
+                lp, ck, cv = xs
+                if fam == "dense":
+                    h, c = B.attn_mlp_decode(lp, h, {"k": ck, "v": cv}, pos, cfg)
+                else:
+                    h, c = B.moe_block_decode(lp, h, {"k": ck, "v": cv}, pos, cfg)
+                return h, (c["k"], c["v"])
+            x, (ks, vs) = _scan_blocks(body, x, (params["blocks"], cache["k"], cache["v"]), cfg)
+            cache = {"k": ks, "v": vs}
+
+        elif fam == "ssm":
+            def body(h, xs):
+                lp, cst, sst = xs
+                h, st = B.mamba_block_decode(lp, h, {"conv": cst, "ssm": sst}, cfg)
+                return h, (st["conv"], st["ssm"])
+            x, (cs, ss) = _scan_blocks(body, x, (params["blocks"], cache["conv"], cache["ssm"]), cfg)
+            cache = {"conv": cs, "ssm": ss}
+
+        elif fam == "hybrid":
+            x, cache = self._hybrid_decode(params, cache, x, pos)
+
+        elif fam == "encdec":
+            def body(h, xs):
+                lp, ck, cv, xk, xv = xs
+                h2, c = attn.attend_decode(
+                    lp["attn"], rmsnorm(lp["ln_attn"], h), {"k": ck, "v": cv}, pos, cfg
+                )
+                h = h + h2
+                h = B.cross_block_decode_cached(
+                    {"ln_x": lp["ln_cross"], "cross": lp["cross"]}, h, xk, xv, cfg
+                )
+                from repro.models.layers import mlp_apply
+                h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln_mlp"], h), cfg.mlp_type)
+                return h, (c["k"], c["v"])
+            x, (ks, vs) = _scan_blocks(
+                body, x,
+                (params["blocks"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]), cfg)
+            cache = dict(cache, k=ks, v=vs)
+
+        elif fam == "vlm":
+            per = cfg.cross_attn_period
+            groups = cfg.n_layers // per
+            grouped = _group_tree(params["blocks"], groups, per)
+            gk = cache["k"].reshape((groups, per) + cache["k"].shape[1:])
+            gv = cache["v"].reshape((groups, per) + cache["v"].shape[1:])
+
+            def group_body(h, xs):
+                gp, cp, ck, cv, xk, xv = xs
+                def inner(hh, xs2):
+                    lp, k1, v1 = xs2
+                    hh, c = B.attn_mlp_decode(lp, hh, {"k": k1, "v": v1}, pos, cfg)
+                    return hh, (c["k"], c["v"])
+                h, (ks, vs) = _scan_blocks(inner, h, (gp, ck, cv), cfg)
+                h = B.cross_block_decode_cached(cp, h, xk, xv, cfg)
+                return h, (ks, vs)
+
+            x, (ks, vs) = _scan_blocks(
+                group_body, x,
+                (grouped, params["cross_blocks"], gk, gv, cache["cross_k"], cache["cross_v"]), cfg)
+            cache = dict(
+                cache,
+                k=ks.reshape(cache["k"].shape),
+                v=vs.reshape(cache["v"].shape),
+            )
+        else:
+            raise ValueError(fam)
+
+        x = rmsnorm(params["ln_f"], x)
+        logits = unembed_apply(params["embed"], x, cfg.logit_softcap)
+        return logits[:, 0], cache
+
+    def _embed_decode(self, params, token, pos):
+        cfg = self.cfg
+        x = embed_apply(params["embed"], token, cfg.dtype)
+        if cfg.embed_scale:
+            x = x * np.sqrt(cfg.d_model).astype(np.float32)
+        if cfg.pos_embed == "sinusoidal":
+            p = sinusoidal_positions(jnp.full((1,), pos), cfg.d_model)
+            x = x + p.astype(x.dtype)
+        return x
+
+    def _hybrid_decode(self, params, cache, x, pos):
+        cfg = self.cfg
+        per = cfg.shared_attn_period
+        groups = cfg.n_layers // per
+        grouped = _group_tree(params["blocks"], groups, per)
+        g_conv = cache["mamba"]["conv"].reshape((groups, per) + cache["mamba"]["conv"].shape[1:])
+        g_ssm = cache["mamba"]["ssm"].reshape((groups, per) + cache["mamba"]["ssm"].shape[1:])
+        shared = params["shared_attn"]
+
+        def group_body(h, xs):
+            gp, cst, sst, sk, sv = xs
+            def inner(hh, xs2):
+                lp, c1, s1 = xs2
+                hh, st = B.mamba_block_decode(lp, hh, {"conv": c1, "ssm": s1}, cfg)
+                return hh, (st["conv"], st["ssm"])
+            h, (cs, ss) = _scan_blocks(inner, h, (gp, cst, sst), cfg)
+            h, c = B.attn_mlp_decode(shared, h, {"k": sk, "v": sv}, pos, cfg)
+            return h, ((cs, ss), (c["k"], c["v"]))
+
+        x, (mst, kvs) = _scan_blocks(
+            group_body, x,
+            (grouped, g_conv, g_ssm, cache["shared"]["k"], cache["shared"]["v"]), cfg)
+        new_cache = {
+            "mamba": {
+                "conv": mst[0].reshape(cache["mamba"]["conv"].shape),
+                "ssm": mst[1].reshape(cache["mamba"]["ssm"].shape),
+            },
+            "shared": {"k": kvs[0], "v": kvs[1]},
+        }
+        if "tail" in params:
+            def tail_body(h, xs):
+                lp, c1, s1 = xs
+                h, st = B.mamba_block_decode(lp, h, {"conv": c1, "ssm": s1}, cfg)
+                return h, (st["conv"], st["ssm"])
+            x, (tc, ts) = _scan_blocks(
+                tail_body, x, (params["tail"], cache["tail"]["conv"], cache["tail"]["ssm"]), cfg)
+            new_cache["tail"] = {"conv": tc, "ssm": ts}
+        return x, new_cache
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,216 @@
+"""Mamba-2 (SSD) block: chunked state-space duality, train + decode paths.
+
+Faithful structure (arXiv:2405.21060): fused in_proj -> [z | x | B | C | dt],
+depthwise causal conv over [x|B|C], SiLU, SSD with scalar-identity A per
+head, D skip, SiLU(z) gating, RMSNorm, out_proj.
+
+Training path = chunked SSD, vectorized over chunks: quadratic work inside
+length-L chunks (dense einsums) and an O(log n_chunks) associative scan for
+the inter-chunk state carry — the same decomposition the Pallas kernel
+(`repro.kernels.ssd`) implements with a sequential VMEM-resident state; the
+associative-scan form lowers to a small HLO, which matters for the 512-way
+dry-run compile budget.
+
+Decode path = the raw recurrence: state (B, H, N, P) and a (W-1)-deep conv
+ring buffer advance one token per step.  This is what makes the SSM archs
+the only ones eligible for ``long_500k`` (state is O(1) in sequence).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cast, rmsnorm, rmsnorm_init
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.n_ssm_heads
+    conv_ch = di + 2 * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(k1, (d, 2 * di + 2 * n + h), jnp.float32) * s,
+        "conv_w": jax.random.normal(k2, (cfg.conv_width, conv_ch), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "out_proj": jax.random.normal(k3, (di, d), jnp.float32) / np.sqrt(di),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n :]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, width W. xbc: (B,S,C); w: (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):  # small static unroll (W=4)
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i]
+    return out + b
+
+
+def _ssd_chunked(log_a, Bm, Cm, x, chunk: int, return_state: bool = False,
+                 intra_dtype: str = "float32"):
+    """Chunked SSD.
+
+    log_a: (B,S,H) log-decay (<= 0) — passed in log space because the decay
+    itself underflows f32 for large dt*|A| and log(0) poisons gradients.
+    Bm/Cm: (B,S,N); x: (B,S,H,P).
+    """
+    b, s, h = log_a.shape
+    n = Bm.shape[-1]
+    p = x.shape[-1]
+    l = min(chunk, s)
+    s_orig = s
+    if s % l:
+        # Pad with identity steps: log_a=0 (no decay), B=C=x=0 — the state
+        # is unchanged and padded outputs are sliced off below.
+        pad = l - s % l
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // l
+
+    Br = Bm.reshape(b, nc, l, n)
+    Cr = Cm.reshape(b, nc, l, n)
+    xr = x.reshape(b, nc, l, h, p)
+
+    log_a = log_a.reshape(b, nc, l, h).astype(jnp.float32)
+    cum = jnp.cumsum(log_a, axis=2)                       # (B,nc,L,H) inclusive
+    # Intra-chunk: masked decay matrix per head.
+    li = cum[:, :, :, None, :]                            # (B,nc,L,1,H)
+    lj = cum[:, :, None, :, :]                            # (B,nc,1,L,H)
+    ii = jnp.arange(l)[:, None]
+    jj = jnp.arange(l)[None, :]
+    causal = (jj <= ii)[None, None, :, :, None]
+    # Mask BEFORE exp: for j > i the exponent is positive and can overflow,
+    # and a where() around an inf poisons gradients.
+    diff = jnp.where(causal, li - lj, 0.0)
+    idt = jnp.dtype(intra_dtype)
+    # Intra-chunk quadratic work in ``intra_dtype`` (§Perf C2: the L x L
+    # decay/score tensors dominate HBM traffic; bf16 halves it).  Decay
+    # cumsums stay fp32; only the bounded [0,1] decay matrix is downcast.
+    m = jnp.where(causal, jnp.exp(diff), 0.0).astype(idt)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr.astype(idt), Br.astype(idt))
+    g = cb[..., None] * m                                  # (B,nc,L,L,H)
+    y_intra = jnp.einsum(
+        "bcijh,bcjhp->bcihp", g, xr.astype(idt)
+    ).astype(jnp.float32)
+
+    # Chunk summaries for the carried state.
+    w_last = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,nc,L,H)
+    t_sum = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchnp", Br.astype(jnp.float32), w_last, xr.astype(jnp.float32)
+    )                                                      # (B,nc,H,N,P)
+    decay = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    def combine(left, right):
+        d1, s1 = left
+        d2, s2 = right
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    d_inc, s_inc = jax.lax.associative_scan(combine, (decay, t_sum), axis=1)
+    # Incoming state of chunk c = inclusive state of chunk c-1 (shifted).
+    s_in = jnp.concatenate([jnp.zeros_like(s_inc[:, :1]), s_inc[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", Cr.astype(jnp.float32), s_in)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    if return_state:
+        return y, s_inc[:, -1]  # (B,H,N,P): state after the last token
+    return y
+
+
+def mamba2_apply(params, u, cfg: ModelConfig, return_state: bool = False):  # noqa: C901
+    """u: (B, S, D) -> (B, S, D). Training / prefill path.
+
+    With ``return_state`` also returns {"conv", "ssm"} — the states a decode
+    loop would hold after consuming the sequence (prefill -> decode handoff).
+    """
+    dt_ = u.dtype
+    b, s, d = u.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    proj = u @ cast(params["in_proj"], dt_)
+    z, xbc_raw, dtv = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc_raw, cast(params["conv_w"], dt_), cast(params["conv_b"], dt_))
+    xbc = jax.nn.silu(xbc)
+    xh = xbc[..., :di].reshape(b, s, h, p)
+    Bm = xbc[..., di : di + n]
+    Cm = xbc[..., di + n :]
+    dt_act = jax.nn.softplus(dtv.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    log_a = -jnp.exp(params["A_log"]) * dt_act            # (B,S,H), <= 0
+    res = _ssd_chunked(
+        log_a, Bm, Cm, xh * dt_act[..., None].astype(dt_), cfg.ssm_chunk,
+        return_state=return_state, intra_dtype=cfg.ssd_intra_dtype,
+    )
+    y, s_final = res if return_state else (res, None)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y)
+    out = y @ cast(params["out_proj"], dt_)
+    if return_state:
+        w = cfg.conv_width
+        conv_state = xbc_raw[:, s - (w - 1):, :] if s >= w - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (w - 1 - s, 0), (0, 0))
+        )
+        return out, {"conv": conv_state, "ssm": s_final}
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype: str) -> Dict:
+    di, n = cfg.d_inner, cfg.ssm_state
+    h, p = cfg.n_ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), jnp.dtype(dtype)),
+        "ssm": jnp.zeros((batch, h, n, p), jnp.float32),
+    }
+
+
+def mamba2_decode(params, u, state: Dict, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """u: (B, 1, D); advances conv ring buffer + SSM state one token."""
+    dt_ = u.dtype
+    b = u.shape[0]
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    proj = u @ cast(params["in_proj"], dt_)               # (B,1,*)
+    z, xbc, dtv = _split_proj(proj, cfg)
+    # Conv over [state || new token].
+    hist = jnp.concatenate([state["conv"], xbc], axis=1)  # (B,W,C)
+    w = cast(params["conv_w"], dt_)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + cast(params["conv_b"], dt_)
+    new_conv = hist[:, 1:, :]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]              # (B,1,C)
+    xh = xbc1[..., :di].reshape(b, h, p)
+    Bm = xbc1[..., di : di + n].reshape(b, n)
+    Cm = xbc1[..., di + n :].reshape(b, n)
+    dt_act = jax.nn.softplus(dtv[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = jnp.exp(-jnp.exp(params["A_log"]) * dt_act)       # (B,H)
+    xw = xh.astype(jnp.float32) * dt_act[..., None]
+    S = state["ssm"] * a[..., None, None] + jnp.einsum("bn,bhp->bhnp", Bm.astype(jnp.float32), xw)
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), S)
+    y = y + params["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y)
+    out = y @ cast(params["out_proj"], dt_)
+    return out, {"conv": new_conv, "ssm": S}

@@ -1,0 +1,60 @@
+"""int8 gradient compression with error feedback (1-bit-Adam-style family).
+
+For cross-pod (DCN) gradient reduction the wire format matters more than
+FLOPs: int8 quantization cuts the all-reduce payload 4x vs fp32.  Plain
+quantization biases updates; **error feedback** (Seide et al. 2014; Karimireddy
+et al. 2019) carries the quantization residual into the next step, restoring
+convergence to the exact trajectory asymptotically.
+
+Usage in the train step (multi-pod): compress -> all-reduce int8/psum over
+``pod`` -> decompress; intra-pod reduction stays full-precision on ICI.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_leaf(g: jnp.ndarray, err: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q int8, scale f32 scalar, new_err)."""
+    combined = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(combined)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(combined / scale), -127, 127).astype(jnp.int8)
+    new_err = combined - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_leaf(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tree(grads, err_state):
+    """Tree-wise compression. Returns (q_tree, scale_tree, new_err_state)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    qs, ss, es = [], [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = compress_leaf(g, e)
+        qs.append(q)
+        ss.append(s)
+        es.append(ne)
+    unf = treedef.unflatten
+    return unf(qs), unf(ss), unf(es)
+
+
+def decompress_tree(q_tree, scale_tree):
+    return jax.tree.map(decompress_leaf, q_tree, scale_tree)
+
+
+def compressed_gradients(grads, err_state):
+    """compress -> (simulated wire) -> decompress, threading error feedback."""
+    q, s, new_err = compress_tree(grads, err_state)
+    return decompress_tree(q, s), new_err

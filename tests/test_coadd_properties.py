@@ -1,0 +1,100 @@
+"""Property-based tests (hypothesis) for the coadd system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CoaddQuery, SpatialIndex, SurveyConfig, make_survey
+from repro.core.engine import _coadd_batch, _query_vec
+from repro.core.mapper import query_grid_sky
+from repro.core.prefilter import camcol_dec_table, glob_file_mask
+
+SURVEY = make_survey(SurveyConfig(n_runs=2, n_fields=4, n_sources=60,
+                                  height=16, width=16))
+INDEX = SpatialIndex.build(SURVEY)
+CAMCOL = camcol_dec_table(SURVEY)
+TAB = SURVEY.meta_table()
+
+
+def _run_ids(ids, query):
+    ids = list(ids)
+    px = jnp.asarray(np.stack([SURVEY.images[i].pixels for i in ids]))
+    wv = jnp.asarray(np.stack([SURVEY.images[i].wcs.to_vector() for i in ids]))
+    ints = {k: jnp.asarray(TAB[k][ids]) for k in ("image_id", "run", "camcol", "band_id", "field")}
+    floats = {k: jnp.asarray(TAB[k][ids]) for k in ("t_obs", "ra_min", "ra_max", "dec_min", "dec_max")}
+    gr, gd = query_grid_sky(query)
+    c, d, n = _coadd_batch(px, wv, ints, floats, jnp.asarray(_query_vec(query)),
+                           jnp.asarray(gr), jnp.asarray(gd))
+    return np.asarray(c), np.asarray(d), int(n)
+
+
+QUERIES = st.builds(
+    lambda ra0, dra, dec0, ddec, band: CoaddQuery(
+        band=band, ra_bounds=(ra0, ra0 + dra), dec_bounds=(dec0, dec0 + ddec), npix=16
+    ),
+    ra0=st.floats(37.0, 37.8), dra=st.floats(0.1, 0.4),
+    dec0=st.floats(-1.0, 0.6), ddec=st.floats(0.1, 0.4),
+    band=st.sampled_from(["u", "g", "r", "i", "z"]),
+)
+
+
+@settings(max_examples=15, deadline=None)
+@given(q=QUERIES)
+def test_prefilter_is_sound(q):
+    """Glob prefilter never drops a truly-overlapping image (no false negatives)."""
+    exact = set(INDEX.select(q).tolist())
+    glob = set(TAB["image_id"][glob_file_mask(TAB, q, CAMCOL)].tolist())
+    assert exact <= glob
+
+
+@settings(max_examples=10, deadline=None)
+@given(q=QUERIES, data=st.data())
+def test_reduce_is_permutation_invariant(q, data):
+    ids = INDEX.select(q)
+    if len(ids) < 2:
+        return
+    perm = data.draw(st.permutations(list(ids)))
+    c1, d1, _ = _run_ids(list(ids), q)
+    c2, d2, _ = _run_ids(perm, q)
+    np.testing.assert_allclose(c1, c2, atol=1e-3)
+    np.testing.assert_array_equal(d1, d2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(q=QUERIES)
+def test_coadd_is_additive(q):
+    """coadd(A ∪ B) = coadd(A) + coadd(B) for disjoint A, B (monoid hom)."""
+    ids = list(INDEX.select(q))
+    if len(ids) < 2:
+        return
+    mid = len(ids) // 2
+    ca, da, _ = _run_ids(ids[:mid], q)
+    cb, db, _ = _run_ids(ids[mid:], q)
+    cab, dab, _ = _run_ids(ids, q)
+    np.testing.assert_allclose(ca + cb, cab, atol=1e-3)
+    np.testing.assert_array_equal(da + db, dab)
+
+
+@settings(max_examples=10, deadline=None)
+@given(q=QUERIES, k=st.integers(2, 4))
+def test_k_copies_scale_linearly(q, k):
+    ids = list(INDEX.select(q))
+    if not ids:
+        return
+    c1, d1, _ = _run_ids([ids[0]], q)
+    ck, dk, _ = _run_ids([ids[0]] * k, q)
+    np.testing.assert_allclose(ck, k * c1, rtol=1e-5, atol=1e-3)
+    np.testing.assert_array_equal(dk, k * d1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(q=QUERIES)
+def test_mapper_discards_false_positives(q):
+    """Images outside the query bounds/band contribute exactly zero."""
+    all_ids = set(TAB["image_id"].tolist())
+    exact = set(INDEX.select(q).tolist())
+    outside = sorted(all_ids - exact)[:8]
+    if not outside:
+        return
+    c, d, n = _run_ids(outside, q)
+    assert n == 0
+    assert np.all(c == 0) and np.all(d == 0)

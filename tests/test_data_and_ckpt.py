@@ -1,0 +1,76 @@
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.data.packing import TokenShards, pack_documents, synthetic_corpus
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+
+
+def test_packing_preserves_tokens_and_index():
+    docs, srcs = synthetic_corpus(n_docs=40, vocab=128, mean_len=50, seed=1)
+    shards = pack_documents(docs, srcs, shard_len=128)
+    # every doc is findable at its index position
+    for i, doc in enumerate(docs):
+        p, o = shards.index[i]
+        flat_from = shards.tokens[p].reshape(-1)[o:o + min(len(doc), 128 - o)]
+        np.testing.assert_array_equal(flat_from, doc[:len(flat_from)])
+    # total non-pad tokens conserved
+    total_in = sum(len(d) for d in docs)
+    assert (shards.doc_ids >= 0).sum() == total_in
+
+
+def test_structured_shards_prune_by_source():
+    docs, srcs = synthetic_corpus(n_docs=60, vocab=128, n_sources=3, seed=2)
+    shards = pack_documents(docs, srcs, shard_len=128, structured=True)
+    pruned = shards.prune([0])
+    assert pruned.n_shards < shards.n_shards
+    assert set(np.unique(pruned.source_key)) == {0}
+
+
+def test_pipeline_is_deterministic_function_of_step():
+    docs, srcs = synthetic_corpus(n_docs=50, vocab=64, seed=3)
+    shards = pack_documents(docs, srcs, shard_len=256)
+    p1 = TokenPipeline(shards, PipelineConfig(4, 32, seed=9))
+    p2 = TokenPipeline(shards, PipelineConfig(4, 32, seed=9))
+    for step in (0, 7, 1000):
+        b1, b2 = p1.batch_at(step), p2.batch_at(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    assert not np.array_equal(p1.batch_at(0)["tokens"], p1.batch_at(1)["tokens"])
+    # labels are next-token targets
+    b = p1.batch_at(5)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_host_slice_partitions_batch():
+    docs, srcs = synthetic_corpus(n_docs=50, vocab=64, seed=3)
+    shards = pack_documents(docs, srcs, shard_len=256)
+    p = TokenPipeline(shards, PipelineConfig(8, 16, seed=0))
+    b = p.batch_at(0)
+    parts = [p.host_slice(b, h, 4)["tokens"] for h in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), b["tokens"])
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    state = {
+        "params": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                   "b": np.ones((4,), np.float32)},
+        "opt": {"m": {"w": np.zeros((3, 4), np.float32)}, "step": np.int32(7)},
+    }
+    mgr = CheckpointManager(str(tmp_path), keep_last=2, async_save=False)
+    for s in (10, 20, 30):
+        mgr.save(s, state)
+    assert mgr.steps() == [20, 30]  # GC'd step 10
+    step, restored = mgr.restore(30, state)
+    np.testing.assert_array_equal(restored["params"]["w"], state["params"]["w"])
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(5, {"params": {"x": np.ones((2,), np.float32)}})
+    mgr.wait()
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    assert mgr.latest_step() == 5

@@ -1,0 +1,107 @@
+"""Distributed tests on 8 forced host devices — run in subprocesses so the
+device-count flag never leaks into the rest of the suite."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, timeout=420):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+def test_distributed_coadd_matches_serial():
+    out = run_py('''
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.core import CoaddEngine, CoaddQuery, SurveyConfig, make_survey
+        sv = make_survey(SurveyConfig(n_runs=2, n_fields=4, n_sources=60, height=16, width=16))
+        eng = CoaddEngine(sv, pack_capacity=16)
+        qs = [CoaddQuery(band="r", ra_bounds=(37.2,37.8), dec_bounds=(-0.5,0.3), npix=32)]
+        mesh = jax.make_mesh((4,2), ("data","model"))
+        rd = eng.run_distributed(qs, mesh)[0]
+        rs = eng.run(qs[0], "sql_structured")
+        assert np.abs(rd.coadd-rs.coadd).max() < 1e-2, np.abs(rd.coadd-rs.coadd).max()
+        assert np.array_equal(rd.depth, rs.depth)
+        mesh3 = jax.make_mesh((2,2,2), ("pod","data","model"))
+        rp = eng.run_distributed(qs, mesh3, data_axes=("pod","data"))[0]
+        assert np.abs(rp.coadd-rs.coadd).max() < 1e-2
+        print("OK")
+    ''')
+    assert "OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    out = run_py('''
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses, jax, numpy as np, jax.numpy as jnp
+        from repro.configs.registry import reduced_config
+        from repro.configs.base import ShapeConfig
+        from repro.launch import specs as S
+        from repro.models.model import build_model
+        from repro.optim.adamw import adamw_init
+        cfg = dataclasses.replace(reduced_config("qwen2-1.5b"), dtype="float32")
+        mesh = jax.make_mesh((4,2), ("data","model"))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        batch = {"tokens": jnp.zeros((8,16),jnp.int32)+3, "labels": jnp.ones((8,16),jnp.int32)}
+        step = S.make_train_step(model)
+        # single device
+        p1,o1,m1 = jax.jit(step)(params,opt,batch)
+        # sharded
+        from repro.distributed import sharding as R
+        ps = R.named_shardings(R.param_pspecs(jax.eval_shape(lambda: params), mesh), mesh)
+        with mesh:
+            p2,o2,m2 = jax.jit(step, in_shardings=(ps,None,None), out_shardings=(ps,None,None))(params,opt,batch)
+        d = max(float(jnp.abs(a-b).max()) for a,b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        assert d < 2e-5, d
+        assert abs(float(m1["loss"])-float(m2["loss"])) < 1e-5
+        print("OK")
+    ''')
+    assert "OK" in out
+
+
+def test_train_crash_resume_bitwise_equal(tmp_path):
+    base = f'''
+        import sys
+        sys.argv = ["train"]
+        from repro.launch.train import main
+    '''
+    run_dir_a = str(tmp_path / "a")
+    run_dir_b = str(tmp_path / "b")
+    common = ("--arch qwen2-1.5b --reduced --steps 12 --global-batch 4 "
+              "--seq-len 32 --vocab 128 --ckpt-every 4 --log-every 100")
+    # uninterrupted
+    run_py(f'''
+        from repro.launch.train import main
+        main("{common} --run-dir {run_dir_a}".split())
+    ''')
+    # crash at step 6, then resume
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(f'''
+            from repro.launch.train import main
+            main("{common} --run-dir {run_dir_b} --crash-at-step 6".split())
+        ''')],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src")), timeout=420)
+    assert r.returncode != 0  # the drill crashed
+    run_py(f'''
+        from repro.launch.train import main
+        main("{common} --run-dir {run_dir_b}".split())
+    ''')
+    a = json.load(open(os.path.join(run_dir_a, "result.json")))
+    b = json.load(open(os.path.join(run_dir_b, "result.json")))
+    assert a["final_loss"] == pytest.approx(b["final_loss"], abs=1e-6), (
+        a["final_loss"], b["final_loss"])

@@ -1,0 +1,45 @@
+import numpy as np
+import pytest
+
+from repro.core.geometry import (
+    WCS, image_bounds, make_grid_wcs, pixel_to_sky, sky_to_pixel,
+    sky_to_tangent, tangent_to_sky,
+)
+
+
+def test_tangent_roundtrip():
+    rng = np.random.default_rng(0)
+    ra0, dec0 = 38.0, -0.3
+    ra = ra0 + rng.uniform(-1, 1, 100)
+    dec = dec0 + rng.uniform(-1, 1, 100)
+    xi, eta = sky_to_tangent(ra, dec, ra0, dec0)
+    ra2, dec2 = tangent_to_sky(xi, eta, ra0, dec0)
+    np.testing.assert_allclose(ra2, ra, atol=1e-9)
+    np.testing.assert_allclose(dec2, dec, atol=1e-9)
+
+
+def test_pixel_sky_roundtrip():
+    wcs = WCS(crval=(37.5, 0.1), crpix=(15.5, 15.5),
+              cd=((0.01, 0.001), (-0.001, 0.01)))
+    v = wcs.to_vector().astype(np.float64)
+    x = np.linspace(0, 31, 8)
+    y = np.linspace(0, 31, 8)
+    ra, dec = pixel_to_sky(x, y, v)
+    x2, y2 = sky_to_pixel(ra, dec, v)
+    np.testing.assert_allclose(x2, x, atol=1e-6)
+    np.testing.assert_allclose(y2, y, atol=1e-6)
+
+
+def test_image_bounds_contains_center():
+    wcs = make_grid_wcs(37.0, 0.0, 64, 0.5)
+    b = image_bounds(wcs, 64, 64)
+    assert b[0] < 37.0 < b[1]
+    assert b[2] < 0.0 < b[3]
+    assert (b[1] - b[0]) == pytest.approx(0.5, rel=0.05)
+
+
+def test_grid_wcs_center_pixel():
+    wcs = make_grid_wcs(40.0, -1.0, 65, 1.0)
+    v = wcs.to_vector().astype(np.float64)
+    ra, dec = pixel_to_sky(np.array([32.0]), np.array([32.0]), v)
+    assert abs(ra[0] - 40.0) < 1e-9 and abs(dec[0] + 1.0) < 1e-9

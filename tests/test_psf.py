@@ -1,0 +1,43 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.psf import convolve_separable, gaussian_kernel_1d, match_psf
+
+
+def _gaussian_image(sigma, n=33):
+    yy, xx = np.mgrid[0:n, 0:n] - (n - 1) / 2
+    g = np.exp(-0.5 * (xx**2 + yy**2) / sigma**2)
+    return jnp.asarray(g / g.sum(), jnp.float32)
+
+
+def _measured_sigma(img):
+    n = img.shape[0]
+    yy, xx = np.mgrid[0:n, 0:n] - (n - 1) / 2
+    img = np.asarray(img) / np.asarray(img).sum()
+    return float(np.sqrt((img * (xx**2 + yy**2)).sum() / 2))
+
+
+def test_kernel_normalized():
+    k = gaussian_kernel_1d(1.5)
+    assert abs(float(k.sum()) - 1.0) < 1e-6
+
+
+def test_convolution_preserves_flux():
+    img = _gaussian_image(1.0)
+    out = convolve_separable(img, gaussian_kernel_1d(1.2))
+    assert abs(float(out.sum()) - float(img.sum())) < 1e-4
+
+
+def test_match_psf_widens_to_target():
+    """Gaussian(s1) * Gaussian(sqrt(s2^2-s1^2)) = Gaussian(s2)."""
+    img = _gaussian_image(1.0)
+    out = match_psf(img, sigma_image=1.0, sigma_target=2.0)
+    assert abs(_measured_sigma(out) - 2.0) < 0.1
+    expected = _gaussian_image(2.0)
+    assert float(jnp.abs(out - expected).max()) < 5e-3
+
+
+def test_match_psf_noop_when_already_wider():
+    img = _gaussian_image(2.0)
+    out = match_psf(img, sigma_image=2.0, sigma_target=1.0)
+    assert out is img
