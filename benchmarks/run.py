@@ -1,6 +1,8 @@
 """Benchmark entrypoint. One function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes ``BENCH_coadd.json``
+(per-method us/image + before/after dispatch counts for the device-resident
+coadd engine).
 
   python -m benchmarks.run             # everything
   python -m benchmarks.run --fast      # skip the slow Table-1 timing loops
@@ -16,6 +18,8 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--coadd-json", default="BENCH_coadd.json",
+                    help="where to write the coadd engine dispatch/latency report")
     args = ap.parse_args()
 
     from benchmarks import kernel_bench, paper_tables
@@ -27,6 +31,11 @@ def main() -> None:
     rows += paper_tables.bench_fig8_breakdown()
     if not args.fast:
         rows += paper_tables.bench_table1()
+    # Always write the dispatch-count report (it's the PR-over-PR perf
+    # trajectory), but keep --fast fast: one timed repeat instead of three.
+    rows += kernel_bench.bench_coadd_engine(
+        out_path=args.coadd_json, repeats=1 if args.fast else 3
+    )
     rows += kernel_bench.bench_mapper_throughput()
     rows += kernel_bench.bench_warp_pallas_interpret()
     rows += kernel_bench.bench_flash_attention()

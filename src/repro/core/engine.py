@@ -17,9 +17,18 @@ benchmarks can reproduce the paper's comparisons measurably:
                                     containers (better locality -> fewer
                                     containers touched)          (§4.1.4)
 
-The per-file strategies pay one host->device dispatch per image — the moral
-equivalent of the paper's per-file namenode RPC; the packed strategies
-amortize it, which is the entire point of sequence files.
+Device-resident pipeline (DESIGN.md §3): the paper's lesson is that per-file
+overhead dominates and packing amortizes it.  The seed engine reproduced the
+*storage* side of that lesson but reintroduced the overhead on the *compute*
+side — a Python loop paying one host->device transfer and one jit dispatch
+per pack, the "per-record RPC" pathology the paper eliminates.  Here every
+layout is uploaded to device **once** and cached; every query is answered by
+**one** jitted `lax.scan` over packs, driven by a static-shape (P, cap)
+boolean slot gate.  Per-query dispatches are O(1) in the number of packs and
+the only per-query host->device traffic is the gate + query vector + output
+grid.  The six methods differ *only* in how the gate is built (and in the
+host-side locate cost of building it), which is exactly the paper's framing:
+input format determines job-init cost, not mapper arithmetic.
 
 `run_distributed` is the production path: images sharded over the
 (``pod`` x) ``data`` axes via `shard_map`, map stage local, reduction by
@@ -48,12 +57,15 @@ from repro.core.prefilter import (
 )
 from repro.core.query import CoaddQuery
 from repro.core.seqfile import (
+    DevicePackedDataset,
     PackedDataset,
     pack_per_file,
     pack_structured,
     pack_unstructured,
 )
 from repro.core.survey import Survey
+from repro.distributed.sharding import shard_map_compat
+from repro.kernels.warp import ops as warp_ops
 
 METHODS = (
     "raw_fits",
@@ -74,6 +86,7 @@ class JobStats:
     t_locate_s: float              # job-init: prefilter/index/gather ("RPC")
     t_map_reduce_s: float          # device compute
     t_total_s: float
+    dispatches: int = 1            # jitted device dispatches for this query
 
 
 @dataclasses.dataclass
@@ -126,21 +139,89 @@ def _coadd_batch(pixels, wcs, ints, floats, qvec, grid_ra, grid_dec, use_kernel=
     return coadd, depth, accept.sum()
 
 
+@partial(jax.jit, static_argnames=("use_kernel", "block_rows", "interpret"))
+def _coadd_scan(
+    pixels,      # (P, cap, H, W) device-resident
+    wcs,         # (P, cap, 8)
+    ints,        # dict of (P, cap) int32
+    floats,      # dict of (P, cap) float32
+    gate,        # (P, cap) bool — static shape, dynamic values
+    qvec,        # (7,)
+    grid_ra,     # (Q, Q)
+    grid_dec,    # (Q, Q)
+    use_kernel=False,
+    block_rows=8,
+    interpret=True,
+):
+    """The whole query in ONE XLA program: scan packs, fuse map+reduce.
+
+    The scan carries (coadd, depth, contributing); each step gates a pack's
+    slots by metadata acceptance AND the caller's slot gate, projects, and
+    accumulates locally — so the (N, Q, Q) tile stack never materializes
+    across packs and the dispatch count is 1 regardless of n_packs.
+    Non-gated slots contribute exact zeros (masked SPMD discard, Fig. 6).
+    Counts come back as device scalars: no per-pack host syncs.
+    """
+
+    def step(carry, xs):
+        coadd, depth, contrib = carry
+        px, wv, ints_p, floats_p, gate_p = xs
+        accept = _accept_from_meta(ints_p, floats_p, qvec) & gate_p
+        if use_kernel:
+            c, d = warp_ops.coadd_fused(
+                px,
+                wv,
+                accept.astype(jnp.float32),
+                grid_ra,
+                grid_dec,
+                block_rows=block_rows,
+                interpret=interpret,
+            )
+        else:
+            tiles, covs = mapper.map_batch(px, wv, accept, grid_ra, grid_dec)
+            c, d = reducer.reduce_local(tiles, covs)
+        return (coadd + c, depth + d, contrib + accept.sum()), None
+
+    q = grid_ra.shape[0]
+    init = (
+        jnp.zeros((q, q), jnp.float32),
+        jnp.zeros((q, q), jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+    (coadd, depth, contrib), _ = jax.lax.scan(
+        step, init, (pixels, wcs, ints, floats, gate)
+    )
+    return coadd, depth, contrib, gate.sum()
+
+
 class CoaddEngine:
-    """Builds the three dataset layouts once, then answers queries 6 ways."""
+    """Builds the three dataset layouts once, then answers queries 6 ways.
+
+    Pixels cross host->device exactly once per layout (`device_dataset`);
+    every `run` is a single jitted dispatch (`_coadd_scan`).  Set
+    ``use_kernel=True`` to fuse map+reduce through the Pallas ``coadd_fused``
+    kernel (``kernel_interpret=False`` on real TPUs lowers through Mosaic).
+    """
 
     def __init__(
         self,
         survey: Survey,
         pack_capacity: int = 64,
         use_kernel: bool = False,
+        block_rows: Optional[int] = None,
+        kernel_interpret: bool = True,
     ):
         self.survey = survey
         self.use_kernel = use_kernel
+        self.block_rows = block_rows  # None -> autotune per (npix, H, W)
+        self.kernel_interpret = kernel_interpret
         self.camcol_dec = camcol_dec_table(survey)
         self.sql = SpatialIndex.build(survey)
         self._datasets: Dict[str, PackedDataset] = {}
+        self._device_cache: Dict[str, DevicePackedDataset] = {}
         self._pack_capacity = pack_capacity
+        self.pack_upload_count = 0   # host->device uploads of pack pixels
+        self.dispatch_count = 0      # jitted device dispatches issued
 
     # ----- dataset layouts (built lazily, cached) -----
     def dataset(self, layout: str) -> PackedDataset:
@@ -159,57 +240,69 @@ class CoaddEngine:
                 raise ValueError(layout)
         return self._datasets[layout]
 
+    def device_dataset(self, layout: str) -> DevicePackedDataset:
+        """Device-resident form of a layout; uploaded once, then cached."""
+        if layout not in self._device_cache:
+            self._device_cache[layout] = self.dataset(layout).to_device()
+            self.pack_upload_count += 1
+        return self._device_cache[layout]
+
     # ----- shared helpers -----
     def _grids(self, query: CoaddQuery):
         gr, gd = mapper.query_grid_sky(query)
         return jnp.asarray(gr), jnp.asarray(gd)
 
-    def _run_packs(
+    def _block_rows(self, query: CoaddQuery, ds: PackedDataset) -> int:
+        if self.block_rows is not None:
+            return self.block_rows
+        h, w = ds.image_hw()
+        return warp_ops.autotune_block_rows(query.npix, h, w)
+
+    def _run_gated(
         self,
-        ds: PackedDataset,
-        pack_ids: Sequence[int],
+        layout: str,
+        gate_np: np.ndarray,
         query: CoaddQuery,
         t_locate: float,
         method: str,
     ) -> CoaddResult:
+        """One-dispatch query: device-resident packs + (P, cap) slot gate."""
+        ds = self.dataset(layout)
+        dev = self.device_dataset(layout)
         grid_ra, grid_dec = self._grids(query)
         qvec = jnp.asarray(_query_vec(query))
+        gate = jnp.asarray(gate_np)
+        block_rows = self._block_rows(query, ds)
         t1 = time.perf_counter()
-        coadd = jnp.zeros((query.npix, query.npix), jnp.float32)
-        depth = jnp.zeros((query.npix, query.npix), jnp.float32)
-        contributing = 0
-        considered = 0
-        for p in pack_ids:
-            ints = {k: jnp.asarray(v[p]) for k, v in ds.ints.items()}
-            floats = {k: jnp.asarray(v[p]) for k, v in ds.floats.items()}
-            c, d, n = _coadd_batch(
-                jnp.asarray(ds.pixels[p]),
-                jnp.asarray(ds.wcs[p]),
-                ints,
-                floats,
-                qvec,
-                grid_ra,
-                grid_dec,
-                use_kernel=self.use_kernel,
-            )
-            coadd = coadd + c
-            depth = depth + d
-            contributing += int(n)
-            considered += int(ds.valid[p].sum())
+        self.dispatch_count += 1
+        coadd, depth, contrib, considered = _coadd_scan(
+            dev.pixels,
+            dev.wcs,
+            dev.ints,
+            dev.floats,
+            gate,
+            qvec,
+            grid_ra,
+            grid_dec,
+            use_kernel=self.use_kernel,
+            block_rows=block_rows,
+            interpret=self.kernel_interpret,
+        )
         coadd.block_until_ready()
         t2 = time.perf_counter()
         stats = JobStats(
             method=method,
-            files_considered=considered,
-            files_contributing=contributing,
-            packs_touched=len(list(pack_ids)),
+            files_considered=int(considered),
+            files_contributing=int(contrib),
+            packs_touched=int(gate_np.any(axis=1).sum()),
             t_locate_s=t_locate,
             t_map_reduce_s=t2 - t1,
             t_total_s=t_locate + (t2 - t1),
+            dispatches=1,
         )
         return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
 
-    # ----- the six methods -----
+    # ----- the six methods (they differ only in gate construction) -----
     def run(self, query: CoaddQuery, method: str) -> CoaddResult:
         if method not in METHODS:
             raise ValueError(f"unknown method {method}; expected one of {METHODS}")
@@ -218,81 +311,48 @@ class CoaddEngine:
     def _run_raw_fits(self, query: CoaddQuery) -> CoaddResult:
         ds = self.dataset("per_file")
         t0 = time.perf_counter()
-        # No prefilter: every file is "located" and dispatched individually.
-        pack_ids = list(range(ds.n_packs))
+        # No prefilter: every file is "located" and becomes a mapper input.
+        gate = ds.valid.copy()
         t_locate = time.perf_counter() - t0
-        return self._run_packs(ds, pack_ids, query, t_locate, "raw_fits")
+        return self._run_gated("per_file", gate, query, t_locate, "raw_fits")
 
     def _run_raw_fits_prefiltered(self, query: CoaddQuery) -> CoaddResult:
         ds = self.dataset("per_file")
         t0 = time.perf_counter()
         mask = glob_file_mask(self.survey.meta_table(), query, self.camcol_dec)
-        pack_ids = np.nonzero(mask)[0].tolist()  # per-file: pack == file
+        gate = ds.valid & mask[:, None]  # per-file layout: pack == file
         t_locate = time.perf_counter() - t0
-        return self._run_packs(ds, pack_ids, query, t_locate, "raw_fits_prefiltered")
+        return self._run_gated(
+            "per_file", gate, query, t_locate, "raw_fits_prefiltered"
+        )
 
     def _run_unstructured_seq(self, query: CoaddQuery) -> CoaddResult:
         ds = self.dataset("unstructured")
         t0 = time.perf_counter()
-        pack_ids = list(range(ds.n_packs))  # unprunable by construction
+        gate = ds.valid.copy()  # unprunable by construction: read every pack
         t_locate = time.perf_counter() - t0
-        return self._run_packs(ds, pack_ids, query, t_locate, "unstructured_seq")
+        return self._run_gated("unstructured", gate, query, t_locate, "unstructured_seq")
 
     def _run_structured_seq_prefiltered(self, query: CoaddQuery) -> CoaddResult:
         ds = self.dataset("structured")
         t0 = time.perf_counter()
         mask = glob_pack_mask(ds, query, self.camcol_dec)
-        pack_ids = np.nonzero(mask)[0].tolist()
+        gate = ds.valid & mask[:, None]
         t_locate = time.perf_counter() - t0
-        return self._run_packs(
-            ds, pack_ids, query, t_locate, "structured_seq_prefiltered"
+        return self._run_gated(
+            "structured", gate, query, t_locate, "structured_seq_prefiltered"
         )
 
     def _sql_gather(self, layout: str, query: CoaddQuery, method: str) -> CoaddResult:
         ds = self.dataset(layout)
         t0 = time.perf_counter()
         ids = self.sql.select(query)
-        # Pad the gathered batch to the pack capacity multiple to keep one
-        # compiled shape across queries (static-shape discipline).
-        cap = ds.capacity
-        pad_to = int(np.ceil(max(len(ids), 1) / cap) * cap)
-        px, wv, ints_np, floats_np, valid, n_packs = ds.gather(ids, pad_to=pad_to)
+        # The index maps ids -> (pack, slot); the "gather" is now a
+        # metadata-only slot gate over the device-resident containers, so
+        # exact selection costs no pixel movement at all.
+        gate = ds.slot_mask(ids)
         t_locate = time.perf_counter() - t0
-
-        grid_ra, grid_dec = self._grids(query)
-        qvec = jnp.asarray(_query_vec(query))
-        t1 = time.perf_counter()
-        coadd = jnp.zeros((query.npix, query.npix), jnp.float32)
-        depth = jnp.zeros((query.npix, query.npix), jnp.float32)
-        contributing = 0
-        for i in range(0, pad_to, cap):
-            ints = {k: jnp.asarray(v[i : i + cap]) for k, v in ints_np.items()}
-            floats = {k: jnp.asarray(v[i : i + cap]) for k, v in floats_np.items()}
-            c, d, n = _coadd_batch(
-                jnp.asarray(px[i : i + cap]),
-                jnp.asarray(wv[i : i + cap]),
-                ints,
-                floats,
-                qvec,
-                grid_ra,
-                grid_dec,
-                use_kernel=self.use_kernel,
-            )
-            coadd = coadd + c
-            depth = depth + d
-            contributing += int(n)
-        coadd.block_until_ready()
-        t2 = time.perf_counter()
-        stats = JobStats(
-            method=method,
-            files_considered=len(ids),
-            files_contributing=contributing,
-            packs_touched=n_packs,
-            t_locate_s=t_locate,
-            t_map_reduce_s=t2 - t1,
-            t_total_s=t_locate + (t2 - t1),
-        )
-        return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
+        return self._run_gated(layout, gate, query, t_locate, method)
 
     def _run_sql_unstructured(self, query: CoaddQuery) -> CoaddResult:
         return self._sql_gather("unstructured", query, "sql_unstructured")
@@ -327,6 +387,7 @@ class CoaddEngine:
         # the model axis, leaving each model shard a band of the coadd.
         shard_axes = tuple(data_axes) + ((model_axis,) if model_axis else ())
         ds = self.dataset("structured")
+        block_rows = self._block_rows(queries[0], ds)
         t0 = time.perf_counter()
         id_sets = [self.sql.select(q) for q in queries]
         all_ids = np.unique(np.concatenate([i for i in id_sets if len(i)]))
@@ -341,6 +402,8 @@ class CoaddEngine:
         in_spec = P(shard_axes)
         meta_keys_i = tuple(sorted(ints_np.keys()))
         meta_keys_f = tuple(sorted(floats_np.keys()))
+        use_kernel = self.use_kernel
+        interpret = self.kernel_interpret
 
         def job(px, wv, ints_flat, floats_flat, qvecs, grids):
             ints = dict(zip(meta_keys_i, ints_flat))
@@ -348,7 +411,16 @@ class CoaddEngine:
 
             def one_query(qvec, grid):
                 accept = _accept_from_meta(ints, floats, qvec)
-                tiles, covs = mapper.map_batch(px, wv, accept, grid[0], grid[1])
+                tiles, covs = mapper.map_batch(
+                    px,
+                    wv,
+                    accept,
+                    grid[0],
+                    grid[1],
+                    use_kernel=use_kernel,
+                    block_rows=block_rows,
+                    interpret=interpret,
+                )
                 c, d = reducer.reduce_local(tiles, covs)
                 return reducer.reduce_collective(
                     c, d, axis_name=data_axes, scatter_axis_name=model_axis
@@ -356,7 +428,9 @@ class CoaddEngine:
             return jax.vmap(one_query)(qvecs, grids)
 
         out_rows = P(None, model_axis) if model_axis else P(None)
-        shard = jax.shard_map(
+        # vmap-of-psum under the VMA/rep checker is broken across jax
+        # versions (psum_invariant rejects axis_index_groups); check=False.
+        shard = shard_map_compat(
             job,
             mesh=mesh,
             in_specs=(
@@ -368,11 +442,10 @@ class CoaddEngine:
                 P(None),
             ),
             out_specs=(out_rows, out_rows),
-            # vmap-of-psum under the VMA checker is broken in jax 0.8
-            # (psum_invariant rejects axis_index_groups); disable the check.
-            check_vma=False,
+            check=False,
         )
         t1 = time.perf_counter()
+        self.dispatch_count += 1
         coadds, depths = shard(
             jnp.asarray(px),
             jnp.asarray(wv),
@@ -394,6 +467,9 @@ class CoaddEngine:
                 t_locate_s=t_locate,
                 t_map_reduce_s=t2 - t1,
                 t_total_s=t_locate + (t2 - t1),
+                # One shard_map dispatch serves the whole multi-query job;
+                # attribute it to the first result so summing stats is honest.
+                dispatches=1 if qi == 0 else 0,
             )
             results.append(
                 CoaddResult(np.asarray(coadds[qi]), np.asarray(depths[qi]), stats)

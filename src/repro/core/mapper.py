@@ -123,12 +123,21 @@ def map_batch(
     grid_ra: jnp.ndarray,
     grid_dec: jnp.ndarray,
     use_kernel: bool = False,
+    block_rows: int | None = None,
+    interpret: bool = True,
 ):
     """vmapped map stage over a batch of images -> (tiles, coverages)."""
     if use_kernel:
         from repro.kernels.warp import ops as warp_ops
 
-        return warp_ops.warp_batch(pixels, wcs_vecs, accept, grid_ra, grid_dec)
+        if block_rows is None:
+            block_rows = warp_ops.autotune_block_rows(
+                grid_ra.shape[0], pixels.shape[1], pixels.shape[2]
+            )
+        return warp_ops.warp_batch(
+            pixels, wcs_vecs, accept.astype(pixels.dtype), grid_ra, grid_dec,
+            block_rows=block_rows, interpret=interpret,
+        )
     return jax.vmap(project_one, in_axes=(0, 0, 0, None, None))(
         pixels, wcs_vecs, accept, grid_ra, grid_dec
     )

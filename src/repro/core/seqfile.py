@@ -40,6 +40,32 @@ FLOAT_COLS = ("t_obs", "ra_min", "ra_max", "dec_min", "dec_max")
 
 
 @dataclasses.dataclass
+class DevicePackedDataset:
+    """Device-resident form of a `PackedDataset` (DESIGN.md §3).
+
+    The whole layout — every container — lives on device as one stacked
+    pytree, uploaded **once** and cached by the engine, so repeated queries
+    never re-transfer pixels.  Shapes mirror `PackedDataset`; arrays are
+    `jax.Array`s.  Per-query state (the slot gate, the query vector, the
+    output grid) stays tiny, which is what makes one-dispatch queries cheap.
+    """
+
+    pixels: "jax.Array"            # (P, cap, H, W) float32
+    wcs: "jax.Array"               # (P, cap, 8) float32
+    valid: "jax.Array"             # (P, cap) bool
+    ints: Dict[str, "jax.Array"]   # (P, cap) int32 each
+    floats: Dict[str, "jax.Array"] # (P, cap) float32 each
+
+    @property
+    def n_packs(self) -> int:
+        return self.pixels.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.pixels.shape[1]
+
+
+@dataclasses.dataclass
 class PackedDataset:
     """A set of sequence-file containers.
 
@@ -75,6 +101,34 @@ class PackedDataset:
 
     def image_hw(self) -> Tuple[int, int]:
         return self.pixels.shape[2], self.pixels.shape[3]
+
+    def to_device(self) -> DevicePackedDataset:
+        """Upload the whole layout to device, once (DESIGN.md §3).
+
+        This is the *only* place pack pixels cross host->device; everything
+        downstream indexes/masks the resident arrays on device.
+        """
+        import jax.numpy as jnp  # deferred: packing itself is jax-free
+
+        return DevicePackedDataset(
+            pixels=jnp.asarray(self.pixels),
+            wcs=jnp.asarray(self.wcs),
+            valid=jnp.asarray(self.valid),
+            ints={k: jnp.asarray(v) for k, v in self.ints.items()},
+            floats={k: jnp.asarray(v) for k, v in self.floats.items()},
+        )
+
+    def slot_mask(self, image_ids) -> np.ndarray:
+        """(P, cap) bool gate selecting exactly `image_ids` (the SQL splits).
+
+        Host-side and metadata-only — the device never sees the id list,
+        just this static-shape mask.
+        """
+        mask = np.zeros((self.n_packs, self.capacity), bool)
+        for i in image_ids:
+            p, s = self.index[int(i)]
+            mask[p, s] = True
+        return mask
 
     def gather(self, image_ids: np.ndarray, pad_to: Optional[int] = None):
         """Gather a dense mapper-input batch for an exact id list.

@@ -12,6 +12,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.warp.warp import autotune_block_rows  # noqa: F401 (re-export)
 from repro.kernels.warp.warp import coadd_fused as _coadd_fused
 from repro.kernels.warp.warp import warp_project as _warp_project
 

@@ -53,6 +53,31 @@ def _tpu_params(dimension_semantics):
         return None
 
 
+def autotune_block_rows(
+    q: int,
+    h: int,
+    w: int,
+    vmem_budget_bytes: int = 4 << 20,
+    candidates=(128, 64, 48, 32, 24, 16, 12, 8, 6, 4, 3, 2, 1),
+) -> int:
+    """Largest ``block_rows`` dividing ``q`` whose grid step fits the budget.
+
+    Per-step VMEM for ``coadd_fused`` (DESIGN.md §2): the source image, two
+    onehot row-gather operands of shape (block_rows*q, h), two gathered row
+    blocks + two onehot column masks of shape (block_rows*q, w), and four
+    (block_rows, q) grid/output blocks — all float32.  The default budget
+    leaves ample headroom in ~16 MB of VMEM for double buffering.
+    """
+    for b in candidates:
+        if b > q or q % b:
+            continue
+        n = b * q
+        step_bytes = 4 * (h * w + 2 * n * h + 4 * n * w + 4 * n)
+        if step_bytes <= vmem_budget_bytes:
+            return b
+    return 1
+
+
 def _sky_to_pixel(gra, gdec, w):
     """Gnomonic sky->pixel for a block. ``w`` is the 8-vector (see geometry)."""
     ra0, dec0 = w[0], w[1]

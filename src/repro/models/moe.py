@@ -97,11 +97,13 @@ def moe_apply_shardmap(params, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.nd
             aux = jax.lax.pmean(aux, ax)
         return out, aux
 
-    fn = jax.shard_map(
+    from repro.distributed.sharding import shard_map_compat
+
+    fn = shard_map_compat(
         body,
         in_specs=(P(), P(axes, None, None)),
         out_specs=(P(axes, None, None), P()),
-        check_vma=False,
+        check=False,
     )
     return fn(params, x)
 

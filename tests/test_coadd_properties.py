@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) for the coadd system invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import CoaddQuery, SpatialIndex, SurveyConfig, make_survey
 from repro.core.engine import _coadd_batch, _query_vec
