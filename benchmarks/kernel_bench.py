@@ -132,16 +132,67 @@ def bench_coadd_engine(out_path: str = "BENCH_coadd.json",
             f"coadd/{m},{dt*1e6/n_img:.1f},"
             f"dispatches={s.dispatches}(was {methods[m]['dispatches_before']})"
         )
+    batched = _bench_batched(eng, repeats=repeats)
+    for bs, rec in sorted(batched.items(), key=lambda kv: int(kv[0])):
+        rows.append(
+            f"coadd/batched/b{bs},{rec['us_per_image']:.1f},"
+            f"us_per_query={rec['us_per_query']:.0f};dispatches={rec['dispatches']}"
+        )
     payload = {
         "npix": QUERY_LARGE.npix,
         "n_images": eng.dataset("per_file").n_packs,
         "pack_uploads": eng.pack_upload_count,
         "methods": methods,
+        "batched": batched,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     rows.append(f"coadd/json,{0:.0f},wrote={out_path}")
     return rows
+
+
+def _bench_batched(eng, repeats: int = 3,
+                   batch_sizes=(1, 2, 4, 8)) -> Dict[str, Dict]:
+    """us/image of `run_batch` per batch size (the paper's Fig. 5 shape).
+
+    Each batch stacks K distinct sql_structured queries (RA-shifted copies of
+    the large query) into ONE vmapped dispatch; amortization shows up as
+    us/image falling with K while dispatches stay at 1.
+    """
+    from repro.core import CoaddQuery
+    from benchmarks.paper_tables import QUERY_LARGE
+
+    out: Dict[str, Dict] = {}
+    for bs in batch_sizes:
+        qs = [
+            CoaddQuery(
+                band=QUERY_LARGE.band,
+                ra_bounds=(QUERY_LARGE.ra_bounds[0] - 0.05 * i,
+                           QUERY_LARGE.ra_bounds[1] - 0.05 * i),
+                dec_bounds=QUERY_LARGE.dec_bounds,
+                npix=QUERY_LARGE.npix,
+            )
+            for i in range(bs)
+        ]
+        eng.run_batch(qs, "sql_structured")  # warm the jit cache per (bs,)
+        best, best_res = None, None
+        for _ in range(repeats):
+            before = eng.dispatch_count
+            t0 = time.perf_counter()
+            res = eng.run_batch(qs, "sql_structured")
+            dt = time.perf_counter() - t0
+            dispatches = eng.dispatch_count - before
+            if best is None or dt < best:
+                best, best_res = dt, (res, dispatches)
+        res, dispatches = best_res
+        n_img = max(sum(r.stats.files_considered for r in res), 1)
+        out[str(bs)] = {
+            "us_per_query": best * 1e6 / bs,
+            "us_per_image": best * 1e6 / n_img,
+            "dispatches": dispatches,
+            "files_considered": n_img,
+        }
+    return out
 
 
 def bench_flash_attention() -> List[str]:

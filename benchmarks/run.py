@@ -6,6 +6,7 @@ coadd engine).
 
   python -m benchmarks.run             # everything
   python -m benchmarks.run --fast      # skip the slow Table-1 timing loops
+  python -m benchmarks.run --quick     # CI smoke: coadd engine report only
 """
 
 from __future__ import annotations
@@ -18,6 +19,9 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke lane: only the coadd engine report "
+                         "(BENCH_coadd.json incl. batched rows), one repeat")
     ap.add_argument("--coadd-json", default="BENCH_coadd.json",
                     help="where to write the coadd engine dispatch/latency report")
     args = ap.parse_args()
@@ -26,6 +30,13 @@ def main() -> None:
 
     t0 = time.perf_counter()
     rows = ["name,us_per_call,derived"]
+    if args.quick:
+        rows += kernel_bench.bench_coadd_engine(
+            out_path=args.coadd_json, repeats=1
+        )
+        print("\n".join(rows))
+        print(f"# total_bench_wall_s={time.perf_counter()-t0:.1f}", file=sys.stderr)
+        return
     rows += paper_tables.bench_table2()
     rows += paper_tables.bench_consistency()
     rows += paper_tables.bench_fig8_breakdown()

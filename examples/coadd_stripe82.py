@@ -21,6 +21,18 @@ for m in METHODS:
     r2 = engine.run(small, m)
     print(f"{m:32s} {r1.stats.files_considered:16d} {r2.stats.files_considered:16d}")
 
+# Batched multi-query single-host job (paper Fig. 5): one jitted dispatch.
+batch = engine.run_batch([large, small], "sql_structured")
+print(f"run_batch: {len(batch)} queries, "
+      f"{sum(r.stats.dispatches for r in batch)} dispatch(es)")
+
+# PSF-matched coadd: convolve every exposure to a common (worst) seeing
+# before stacking, so the coadd has a well-defined point-spread function.
+worst = max(im.psf_sigma for im in survey.images)
+matched = CoaddEngine(survey, pack_capacity=64, match_psf_sigma=worst)
+rm = matched.run(large, "sql_structured")
+print(f"psf-matched to sigma={worst:.2f}px: depth_max={rm.depth.max():.0f}")
+
 # Multi-query distributed job (paper Fig. 5: parallel reducers over queries).
 n = len(jax.devices())
 shape = (n, 1) if n > 1 else (1, 1)

@@ -7,6 +7,7 @@ Public API:
 
 from repro.core.engine import METHODS, CoaddEngine, CoaddResult, JobStats
 from repro.core.jobtracker import FailureInjector, JobTracker, MapTask
+from repro.core.plan import CoaddPlan, stack_plans
 from repro.core.prefilter import SpatialIndex
 from repro.core.query import BANDS, CoaddQuery
 from repro.core.survey import Survey, SurveyConfig, make_survey
@@ -14,6 +15,7 @@ from repro.core.survey import Survey, SurveyConfig, make_survey
 __all__ = [
     "BANDS",
     "CoaddEngine",
+    "CoaddPlan",
     "CoaddResult",
     "CoaddQuery",
     "FailureInjector",
@@ -25,4 +27,5 @@ __all__ = [
     "Survey",
     "SurveyConfig",
     "make_survey",
+    "stack_plans",
 ]

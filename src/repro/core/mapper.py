@@ -125,8 +125,19 @@ def map_batch(
     use_kernel: bool = False,
     block_rows: int | None = None,
     interpret: bool = True,
+    psf_kernels: jnp.ndarray | None = None,  # (N, K) from matching_kernel_bank
 ):
-    """vmapped map stage over a batch of images -> (tiles, coverages)."""
+    """vmapped map stage over a batch of images -> (tiles, coverages).
+
+    When ``psf_kernels`` is given, each image is first convolved to the
+    engine's common target PSF (separable, per-slot kernel row) — the
+    PSF-matching step the paper deferred, inserted before warping so the
+    projected tiles all share one point-spread function.
+    """
+    if psf_kernels is not None:
+        from repro.core import psf
+
+        pixels = psf.convolve_batch(pixels, psf_kernels)
     if use_kernel:
         from repro.kernels.warp import ops as warp_ops
 

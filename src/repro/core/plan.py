@@ -1,0 +1,69 @@
+"""Query planning: the host-side half of the plan/execute engine split.
+
+The paper's framing is that input format determines *job-init* cost, not
+mapper arithmetic: the six methods differ only in how the set of candidate
+images is located.  A `CoaddPlan` captures exactly that job-init product —
+which layout to scan, the static-shape (P, cap) slot gate selecting its
+candidate slots, and the query vector the device-side acceptance test needs
+— plus the host time spent locating (the paper's "construct file splits"
+phase, Fig. 8).
+
+Because a plan is pure data, the same plan runs anywhere: `CoaddEngine.run`
+executes one against the device-resident layout, `run_batch` stacks several
+plans for a shared layout into one vmapped dispatch (the paper's Fig. 5
+multi-query amortization), and `run_distributed` builds the flattened
+equivalent against a mesh-resident layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.query import CoaddQuery
+
+
+@dataclasses.dataclass
+class CoaddPlan:
+    """One planned query: layout + slot gate + query vector + locate stats."""
+
+    method: str
+    layout: str            # "per_file" | "unstructured" | "structured"
+    gate: np.ndarray       # (P, cap) bool — static shape, dynamic values
+    qvec: np.ndarray       # (7,) float32 device-side acceptance vector
+    query: CoaddQuery
+    t_locate_s: float      # host job-init cost (prefilter/index, Fig. 8)
+
+    @property
+    def npix(self) -> int:
+        return self.query.npix
+
+    @property
+    def packs_touched(self) -> int:
+        """Distinct containers the gate opens (§4.1.4 locality statistic)."""
+        return int(self.gate.any(axis=1).sum())
+
+
+def stack_plans(plans: Sequence[CoaddPlan]) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack same-layout plans into batched (K, P, cap) gates + (K, 7) qvecs.
+
+    One batched job must share a layout (one resident dataset to scan) and an
+    output grid size (one static scan program); both are validated here so
+    `run_batch` fails loudly at plan time, not at trace time.
+    """
+    if not plans:
+        raise ValueError("cannot stack zero plans")
+    layouts = {p.layout for p in plans}
+    if len(layouts) != 1:
+        raise ValueError(f"batched plans must share a layout, got {layouts}")
+    npixes = {p.npix for p in plans}
+    if len(npixes) != 1:
+        raise ValueError(f"batched plans must share npix, got {npixes}")
+    gates = np.stack([p.gate for p in plans])
+    qvecs = np.stack([p.qvec for p in plans])
+    return gates, qvecs
+
+
+__all__: List[str] = ["CoaddPlan", "stack_plans"]

@@ -9,7 +9,13 @@ closed under convolution).
 
 Separable implementation (two 1-D convs) — O(H*W*K) and jit/vmap-friendly;
 the engine applies it per image in the map stage when
-``CoaddEngine(..., match_psf_sigma=...)`` is set.
+``CoaddEngine(..., match_psf_sigma=...)`` is set.  Because the matching
+widths vary per image but jit demands static shapes, the engine
+host-precomputes a *kernel bank* — one (K,) row per pack slot, all sharing
+the dataset-wide max radius, delta rows where no widening is needed
+(`matching_kernel_bank`) — and passes it to the map stage as a plain
+operand, in both the XLA path (`convolve_batch`) and the Pallas
+`coadd_fused` kernel (in-kernel banded-matmul convolution).
 """
 
 from __future__ import annotations
@@ -22,10 +28,43 @@ import numpy as np
 def gaussian_kernel_1d(sigma: float, radius: int | None = None) -> jnp.ndarray:
     if sigma <= 0:
         return jnp.ones((1,), jnp.float32)
-    radius = radius or max(1, int(np.ceil(3.0 * sigma)))
+    if radius is None:
+        radius = max(1, int(np.ceil(3.0 * sigma)))
     x = jnp.arange(-radius, radius + 1, dtype=jnp.float32)
     k = jnp.exp(-0.5 * (x / sigma) ** 2)
     return k / k.sum()
+
+
+def matching_kernel_bank(
+    psf_sigmas: np.ndarray, sigma_target: float, radius: int | None = None
+) -> np.ndarray:
+    """Per-slot 1-D matching kernels, one static-width bank for a dataset.
+
+    ``psf_sigmas`` is any-shaped (...,) array of per-image PSF widths; the
+    result is (..., K) with K = 2*radius + 1 shared across slots (static
+    shapes for jit / Pallas operands).  Slots already at/above the target
+    (and empty slots with sigma 0 treated alike) get an exact delta row, so
+    applying the bank is a no-op for them — the "no-op when
+    sigma_target <= sigma_image" rule of `match_psf`, vectorized.
+    """
+    s = np.asarray(psf_sigmas, np.float64)
+    # sigma <= 0 marks an empty/padded slot, not an infinitely sharp image:
+    # give it a delta row and keep it out of the bank-radius computation so
+    # phantom slots can't widen K for the whole layout.
+    sig_k = np.where(
+        s > 0, np.sqrt(np.maximum(sigma_target**2 - s**2, 0.0)), 0.0
+    )
+    if radius is None:
+        radius = int(np.ceil(3.0 * float(sig_k.max(initial=0.0))))
+    k_width = 2 * radius + 1
+    x = np.arange(-radius, radius + 1, dtype=np.float64)
+    delta = (x == 0).astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        g = np.exp(-0.5 * (x / np.where(sig_k == 0, 1.0, sig_k)[..., None]) ** 2)
+    bank = np.where((sig_k > 0)[..., None], g, delta)
+    bank = bank / bank.sum(axis=-1, keepdims=True)
+    assert bank.shape == s.shape + (k_width,)
+    return bank.astype(np.float32)
 
 
 def convolve_separable(image: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
@@ -38,6 +77,18 @@ def convolve_separable(image: jnp.ndarray, kernel: jnp.ndarray) -> jnp.ndarray:
     out = jax.vmap(conv1d)(image)          # rows
     out = jax.vmap(conv1d)(out.T).T        # cols
     return out
+
+
+def convolve_batch(images: jnp.ndarray, kernels: jnp.ndarray) -> jnp.ndarray:
+    """(N, H, W) images, each convolved with its own (K,) kernel row.
+
+    The per-image kernels come from `matching_kernel_bank`; a delta row makes
+    the convolution exact identity up to float rounding.  K == 1 (a bank with
+    zero max radius, i.e. nothing to widen) short-circuits to a multiply.
+    """
+    if kernels.shape[-1] == 1:
+        return images * kernels[..., 0][:, None, None]
+    return jax.vmap(convolve_separable)(images, kernels)
 
 
 def match_psf(image: jnp.ndarray, sigma_image: float, sigma_target: float) -> jnp.ndarray:

@@ -36,7 +36,7 @@ META_COLS = (
     "band_id",
     "field",
 )
-FLOAT_COLS = ("t_obs", "ra_min", "ra_max", "dec_min", "dec_max")
+FLOAT_COLS = ("t_obs", "ra_min", "ra_max", "dec_min", "dec_max", "psf_sigma")
 
 
 @dataclasses.dataclass
@@ -52,8 +52,10 @@ class DevicePackedDataset:
 
     pixels: "jax.Array"            # (P, cap, H, W) float32
     wcs: "jax.Array"               # (P, cap, 8) float32
-    valid: "jax.Array"             # (P, cap) bool
-    ints: Dict[str, "jax.Array"]   # (P, cap) int32 each
+    ints: Dict[str, "jax.Array"]   # (P, cap) int32 each; empty slots have
+                                   #   image_id -1 (rejected by acceptance);
+                                   #   slot validity itself stays host-side
+                                   #   (PackedDataset.valid -> plan gates)
     floats: Dict[str, "jax.Array"] # (P, cap) float32 each
 
     @property
@@ -63,6 +65,28 @@ class DevicePackedDataset:
     @property
     def capacity(self) -> int:
         return self.pixels.shape[1]
+
+
+@dataclasses.dataclass
+class MeshResidentDataset:
+    """A layout sharded *onto a device mesh* once and reused across jobs.
+
+    The distributed sibling of `DevicePackedDataset`: containers are
+    flattened to image-major ``(M, ...)`` arrays (padded so M divides the
+    shard count), then `jax.device_put` with a `NamedSharding` over the data
+    axes pins each shard to its device.  The engine caches one of these per
+    (layout, mesh, shard_axes), so `run_distributed`'s per-job host traffic
+    drops to slot gates + query vectors + output grids — the same residency
+    win `DevicePackedDataset` gave the single-host path (DESIGN.md §4).
+    """
+
+    pixels: "jax.Array"            # (M, H, W) float32, sharded over axis 0
+    wcs: "jax.Array"               # (M, 8)
+    ints: Dict[str, "jax.Array"]   # (M,) int32 each; padded slots have
+                                   #   image_id -1 (rejected by acceptance)
+    floats: Dict[str, "jax.Array"] # (M,) float32 each
+    psf_kernels: Optional["jax.Array"]  # (M, K) float32, or None
+    n_flat: int                    # padded flat length M (static per cache key)
 
 
 @dataclasses.dataclass
@@ -113,7 +137,6 @@ class PackedDataset:
         return DevicePackedDataset(
             pixels=jnp.asarray(self.pixels),
             wcs=jnp.asarray(self.wcs),
-            valid=jnp.asarray(self.valid),
             ints={k: jnp.asarray(v) for k, v in self.ints.items()},
             floats={k: jnp.asarray(v) for k, v in self.floats.items()},
         )
@@ -129,6 +152,63 @@ class PackedDataset:
             p, s = self.index[int(i)]
             mask[p, s] = True
         return mask
+
+    def flat_slot_mask(self, image_ids, pad_to: Optional[int] = None) -> np.ndarray:
+        """(M,) bool gate over the flattened (pack*cap) slot axis.
+
+        The mesh-resident analogue of `slot_mask`: selection stays host-side
+        and metadata-only, and this mask (not pixels) is the only per-job
+        payload `run_distributed` ships to the mesh.
+        """
+        m = self.n_packs * self.capacity
+        mask = np.zeros((pad_to or m,), bool)
+        for i in image_ids:
+            p, s = self.index[int(i)]
+            mask[p * self.capacity + s] = True
+        return mask
+
+    def to_mesh(
+        self,
+        mesh,
+        shard_axes: Tuple[str, ...],
+        psf_kernels: Optional[np.ndarray] = None,
+    ) -> MeshResidentDataset:
+        """Shard this layout onto `mesh` once (DESIGN.md §4).
+
+        Flattens (P, cap) -> (M,) image-major, pads M up to the shard count
+        with invalid slots (image_id -1, valid False — the same phantom-proof
+        padding `_accept_from_meta` already rejects), and `device_put`s every
+        array with a `NamedSharding` over ``shard_axes``.  This is the only
+        place distributed pixels cross host->mesh; the engine caches the
+        result per (layout, mesh, shard_axes).
+        """
+        import jax  # deferred: packing itself is jax-free
+
+        from repro.distributed.sharding import image_axis_sharding, shard_count
+
+        m = self.n_packs * self.capacity
+        n_shards = shard_count(mesh, shard_axes)
+        pad_to = int(np.ceil(m / n_shards) * n_shards)
+
+        def flat(a: np.ndarray, fill) -> np.ndarray:
+            a = a.reshape((m,) + a.shape[2:])
+            if pad_to > m:
+                a = np.concatenate(
+                    [a, np.full((pad_to - m,) + a.shape[1:], fill, a.dtype)]
+                )
+            return a
+
+        sharding = image_axis_sharding(mesh, shard_axes)
+        put = lambda a: jax.device_put(a, sharding)  # noqa: E731
+        return MeshResidentDataset(
+            pixels=put(flat(self.pixels, 0)),
+            wcs=put(flat(self.wcs, 0)),
+            ints={k: put(flat(v, -1)) for k, v in self.ints.items()},
+            floats={k: put(flat(v, 0)) for k, v in self.floats.items()},
+            psf_kernels=None if psf_kernels is None
+            else put(flat(psf_kernels, 0)),
+            n_flat=pad_to,
+        )
 
     def gather(self, image_ids: np.ndarray, pad_to: Optional[int] = None):
         """Gather a dense mapper-input batch for an exact id list.

@@ -79,6 +79,7 @@ class SurveyImage:
     wcs: WCS
     bounds: tuple          # (ra_min, ra_max, dec_min, dec_max)
     pixels: np.ndarray     # (H, W) float32
+    psf_sigma: float = 1.2  # per-image seeing (px); drives PSF matching
 
     @property
     def band(self) -> str:
@@ -110,6 +111,7 @@ class Survey:
             "ra_max": np.array([im.bounds[1] for im in self.images], np.float32),
             "dec_min": np.array([im.bounds[2] for im in self.images], np.float32),
             "dec_max": np.array([im.bounds[3] for im in self.images], np.float32),
+            "psf_sigma": np.array([im.psf_sigma for im in self.images], np.float32),
             "wcs": np.stack([im.wcs.to_vector() for im in self.images]),
         }
         return tab
@@ -176,6 +178,10 @@ def make_survey(config: Optional[SurveyConfig] = None) -> Survey:
         dec_jit = run_rng.normal(0.0, cfg.pointing_jitter_frac * cfg.camcol_dec_deg)
         ra_phase = run_rng.uniform(-cfg.pointing_jitter_frac, cfg.pointing_jitter_frac) * cfg.field_ra_deg
         theta = np.deg2rad(run_rng.normal(0.0, cfg.rotation_jitter_deg))
+        # Per-run seeing: atmospheric conditions vary between epochs, so each
+        # run's PSF width jitters around the nominal — this is what makes PSF
+        # matching to a common (worst) width a real operation, not a no-op.
+        seeing = float(cfg.psf_sigma_px * run_rng.uniform(0.85, 1.35))
         rot = np.array(
             [[np.cos(theta), -np.sin(theta)], [np.sin(theta), np.cos(theta)]]
         )
@@ -201,7 +207,7 @@ def make_survey(config: Optional[SurveyConfig] = None) -> Survey:
                         cat_ra,
                         cat_dec,
                         cat_flux[:, band_id],
-                        cfg.psf_sigma_px,
+                        seeing,
                         cfg.background,
                         cfg.noise_sigma,
                         pix_rng,
@@ -217,6 +223,7 @@ def make_survey(config: Optional[SurveyConfig] = None) -> Survey:
                             wcs=wcs,
                             bounds=bounds,
                             pixels=pixels,
+                            psf_sigma=seeing,
                         )
                     )
                     image_id += 1

@@ -30,10 +30,28 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# ----------------------------------------------------- coadd mesh residency ---
+
+
+def shard_count(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    """Total number of shards over the given mesh axes."""
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def image_axis_sharding(mesh: Mesh, shard_axes: Tuple[str, ...]) -> NamedSharding:
+    """NamedSharding splitting an image-major (M, ...) array over `shard_axes`.
+
+    Used by `PackedDataset.to_mesh` to pin a whole coadd layout onto the mesh
+    once: axis 0 (the flattened image axis) is split over every shard axis,
+    trailing (H, W, meta...) dims are replicated within a shard.
+    """
+    return NamedSharding(mesh, P(tuple(shard_axes)))
+
+
 # ------------------------------------------------------------- shard_map ---
 
 
-def shard_map_compat(f, mesh=None, in_specs=None, out_specs=None, check=False):
+def shard_map_compat(f, mesh=None, in_specs=None, out_specs=None, check=True):
     """`shard_map` across the jax API break.
 
     jax >= 0.6 exposes top-level ``jax.shard_map`` (mesh optional, VMA check

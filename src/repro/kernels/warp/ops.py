@@ -35,9 +35,14 @@ def warp_batch(pixels, wcs_vecs, accepts, grid_ra, grid_dec, block_rows=8, inter
 
 
 @partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def coadd_fused(pixels, wcs_vecs, accepts, grid_ra, grid_dec, block_rows=8, interpret=True):
-    """Fused map+reduce: (N,H,W) images -> (Q,Q) coadd + depth."""
+def coadd_fused(pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels=None,
+                block_rows=8, interpret=True):
+    """Fused map+reduce: (N,H,W) images -> (Q,Q) coadd + depth.
+
+    ``psf_kernels`` (N, K), when given, PSF-matches each image inside the
+    kernel before warping (banded-matmul separable convolution).
+    """
     return _coadd_fused(
-        pixels, wcs_vecs, accepts, grid_ra, grid_dec,
+        pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels=psf_kernels,
         block_rows=block_rows, interpret=interpret,
     )

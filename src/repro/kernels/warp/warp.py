@@ -59,20 +59,29 @@ def autotune_block_rows(
     w: int,
     vmem_budget_bytes: int = 4 << 20,
     candidates=(128, 64, 48, 32, 24, 16, 12, 8, 6, 4, 3, 2, 1),
+    psf_kernel_width: int = 0,
 ) -> int:
     """Largest ``block_rows`` dividing ``q`` whose grid step fits the budget.
 
     Per-step VMEM for ``coadd_fused`` (DESIGN.md §2): the source image, two
     onehot row-gather operands of shape (block_rows*q, h), two gathered row
     blocks + two onehot column masks of shape (block_rows*q, w), and four
-    (block_rows, q) grid/output blocks — all float32.  The default budget
-    leaves ample headroom in ~16 MB of VMEM for double buffering.
+    (block_rows, q) grid/output blocks — all float32.  When the PSF-matching
+    variant runs (``psf_kernel_width`` > 0), each step additionally holds the
+    (h, h) and (w, w) band matrices, the convolved image copy, and the
+    kernel row — a block_rows-independent term, but it still shrinks the
+    space left for the row blocks.  The default budget leaves ample headroom
+    in ~16 MB of VMEM for double buffering.
     """
+    psf_bytes = (
+        4 * (h * h + w * w + h * w + psf_kernel_width)
+        if psf_kernel_width > 1 else 0
+    )
     for b in candidates:
         if b > q or q % b:
             continue
         n = b * q
-        step_bytes = 4 * (h * w + 2 * n * h + 4 * n * w + 4 * n)
+        step_bytes = 4 * (h * w + 2 * n * h + 4 * n * w + 4 * n) + psf_bytes
         if step_bytes <= vmem_budget_bytes:
             return b
     return 1
@@ -141,6 +150,37 @@ def _bilinear_via_matmul(image, sx, sy):
     inside = (sxf >= 0) & (sxf <= w - 1) & (syf >= 0) & (syf <= h - 1)
     m = inside.astype(image.dtype)
     return (val * m).reshape(bq, q), m.reshape(bq, q)
+
+
+def _conv_band_matrix(kernel, n: int, dtype):
+    """(n, n) banded matrix M with M @ x == edge-padded 1-D conv of x.
+
+    M[i, j] = sum_m kernel[m] * [j == clip(i + m - r, 0, n-1)] — identical to
+    ``jnp.convolve(pad(x, edge), kernel, 'valid')`` for the symmetric
+    (Gaussian) kernels `matching_kernel_bank` emits.  Built from iotas and a
+    static loop over the K taps, so the separable PSF convolution becomes two
+    matmuls — the same dense-algebra reformulation as the row-gather (§2).
+    """
+    k_width = kernel.shape[0]
+    r = (k_width - 1) // 2
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    m_mat = jnp.zeros((n, n), dtype)
+    for m in range(k_width):
+        src = jnp.clip(rows + (m - r), 0, n - 1)
+        m_mat = m_mat + kernel[m] * (cols == src).astype(dtype)
+    return m_mat
+
+
+def _convolve_sep_matmul(image, kernel):
+    """Separable PSF convolution as two MXU matmuls (edge-padded)."""
+    if kernel.shape[0] == 1:
+        return image * kernel[0]
+    h, w = image.shape
+    m_h = _conv_band_matrix(kernel, h, image.dtype)
+    m_w = _conv_band_matrix(kernel, w, image.dtype)
+    out = jnp.dot(image, m_w.T, preferred_element_type=jnp.float32)   # rows
+    return jnp.dot(m_h, out, preferred_element_type=jnp.float32)      # cols
 
 
 def _warp_kernel(wcs_ref, accept_ref, image_ref, gra_ref, gdec_ref, tile_ref, cov_ref):
@@ -213,6 +253,42 @@ def _coadd_fused_kernel(
         depth_ref[...] += cov * a
 
 
+def _coadd_fused_psf_kernel(
+    wcs_ref, accept_ref, kern_ref, image_ref, gra_ref, gdec_ref, coadd_ref, depth_ref
+):
+    """`_coadd_fused_kernel` + in-kernel PSF matching before the warp.
+
+    The per-slot matching kernel row arrives as an operand; the separable
+    convolution is two banded matmuls (`_convolve_sep_matmul`), so the
+    PSF-matched image never round-trips through HBM either.
+
+    Tradeoff: the convolution depends only on the image index but runs once
+    per (row_block, image) grid step — a q/block_rows-fold recompute.  It
+    cannot be hoisted without breaking the accumulate-innermost idiom (a
+    scratch per image would be clobbered before the next row block returns
+    to it; making images the outer grid dim would revisit output blocks
+    non-consecutively, which the accumulation pattern forbids).  The band
+    matmuls are MXU work of the same order as the row gather, so fusion
+    still wins over materializing N convolved images in HBM.
+    """
+    i = pl.program_id(1)
+    w = wcs_ref[0, :]
+    a = accept_ref[0, 0]
+    img = _convolve_sep_matmul(image_ref[0], kern_ref[0, :])
+    sx, sy = _sky_to_pixel(gra_ref[...], gdec_ref[...], w)
+    val, cov = _bilinear_via_matmul(img, sx, sy)
+
+    @pl.when(i == 0)
+    def _init():
+        coadd_ref[...] = val * a
+        depth_ref[...] = cov * a
+
+    @pl.when(i > 0)
+    def _accum():
+        coadd_ref[...] += val * a
+        depth_ref[...] += cov * a
+
+
 def coadd_fused(
     pixels: jnp.ndarray,    # (N, H, W)
     wcs_vecs: jnp.ndarray,  # (N, 8)
@@ -220,6 +296,7 @@ def coadd_fused(
     grid_ra: jnp.ndarray,   # (Q, Q)
     grid_dec: jnp.ndarray,  # (Q, Q)
     *,
+    psf_kernels: jnp.ndarray | None = None,  # (N, K) matching-kernel bank rows
     block_rows: int = 8,
     interpret: bool = True,
 ):
@@ -230,16 +307,30 @@ def coadd_fused(
     if q % block_rows:
         raise ValueError(f"npix {q} must divide block_rows {block_rows}")
     grid = (q // block_rows, n)  # row blocks parallel; images sequential
+    in_specs = [
+        pl.BlockSpec((1, 8), lambda r, i: (i, 0)),
+        pl.BlockSpec((1, 1), lambda r, i: (i, 0)),
+        pl.BlockSpec((1, h, w), lambda r, i: (i, 0, 0)),
+        pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
+        pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
+    ]
+    operands = [
+        wcs_vecs.astype(jnp.float32),
+        accepts.astype(jnp.float32).reshape(n, 1),
+        pixels.astype(jnp.float32),
+        grid_ra,
+        grid_dec,
+    ]
+    kernel_fn = _coadd_fused_kernel
+    if psf_kernels is not None:
+        k_width = psf_kernels.shape[1]
+        in_specs.insert(2, pl.BlockSpec((1, k_width), lambda r, i: (i, 0)))
+        operands.insert(2, psf_kernels.astype(jnp.float32))
+        kernel_fn = _coadd_fused_psf_kernel
     out = pl.pallas_call(
-        _coadd_fused_kernel,
+        kernel_fn,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 8), lambda r, i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda r, i: (i, 0)),
-            pl.BlockSpec((1, h, w), lambda r, i: (i, 0, 0)),
-            pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
-            pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
             pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
@@ -250,11 +341,5 @@ def coadd_fused(
         ],
         compiler_params=_tpu_params(("parallel", "arbitrary")),
         interpret=interpret,
-    )(
-        wcs_vecs.astype(jnp.float32),
-        accepts.astype(jnp.float32).reshape(n, 1),
-        pixels.astype(jnp.float32),
-        grid_ra,
-        grid_dec,
-    )
+    )(*operands)
     return out[0], out[1]

@@ -165,6 +165,99 @@ def test_second_query_uploads_nothing(survey, monkeypatch):
     assert eng._device_cache["structured"].pixels is dev_pixels
 
 
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["xla", "kernel"])
+@pytest.mark.parametrize("method", [m for m in METHODS])
+def test_run_batch_matches_per_query_run(survey, method, use_kernel):
+    """Batched results match per-query run() for all six methods."""
+    eng = CoaddEngine(survey, pack_capacity=16, use_kernel=use_kernel)
+    q2 = CoaddQuery(band="r", ra_bounds=(37.2, 37.7), dec_bounds=(-0.4, 0.2),
+                    npix=48)
+    singles = [eng.run(QUERY, method), eng.run(q2, method)]
+    batch = eng.run_batch([QUERY, q2], method)
+    assert len(batch) == 2
+    for s, b in zip(singles, batch):
+        # Same engine, same gates: the vmapped scan may vectorize the trig
+        # differently than the single-query scan, so allow ulp-level jitter.
+        np.testing.assert_allclose(b.coadd, s.coadd, atol=1e-3, rtol=1e-4)
+        np.testing.assert_array_equal(b.depth, s.depth)
+        assert b.stats.files_contributing == s.stats.files_contributing
+        assert b.stats.files_considered == s.stats.files_considered
+
+
+def test_run_batch_single_dispatch_no_reupload(survey, monkeypatch):
+    """K queries = ONE jitted dispatch and ZERO pack re-uploads."""
+    eng = CoaddEngine(survey, pack_capacity=16)
+    eng.run(QUERY, "sql_structured")      # warm: layout uploaded once here
+    uploads = eng.pack_upload_count
+
+    def _no_more_uploads(self):
+        raise AssertionError("pack pixels re-uploaded by run_batch")
+
+    monkeypatch.setattr(PackedDataset, "to_device", _no_more_uploads)
+    queries = [
+        CoaddQuery(band="r", ra_bounds=(37.2 + 0.1 * i, 37.8 + 0.1 * i),
+                   dec_bounds=(-0.5, 0.3), npix=48)
+        for i in range(3)
+    ]
+    before = eng.dispatch_count
+    results = eng.run_batch(queries, "sql_structured")
+    assert eng.dispatch_count - before == 1
+    assert eng.pack_upload_count == uploads
+    assert sum(r.stats.dispatches for r in results) == 1
+    assert eng.run_batch([], "sql_structured") == []
+
+
+def test_distributed_mesh_resident_no_regather(survey, monkeypatch):
+    """Second job over the same mesh: 0 host pixel gathers, 0 re-shards."""
+    import jax
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eng = CoaddEngine(survey, pack_capacity=16)
+    q = CoaddQuery(band="r", ra_bounds=(37.3, 37.9), dec_bounds=(-0.5, 0.3),
+                   npix=32)
+    r1 = eng.run_distributed([q], mesh)[0]
+    assert r1.depth.max() > 0
+    assert eng.mesh_upload_count == 1
+    mds = eng._mesh_cache[("structured", mesh, ("data", "model"))]
+
+    def _no_gather(self, *a, **k):
+        raise AssertionError("host pixel gather on a repeat distributed job")
+
+    monkeypatch.setattr(PackedDataset, "gather", _no_gather)
+    monkeypatch.setattr(PackedDataset, "to_mesh", _no_gather)
+    q2 = CoaddQuery(band="g", ra_bounds=(37.2, 37.7), dec_bounds=(-0.4, 0.2),
+                    npix=32)
+    r2 = eng.run_distributed([q2], mesh)[0]
+    assert eng.mesh_upload_count == 1
+    assert eng._mesh_cache[("structured", mesh, ("data", "model"))] is mds
+    # And the cached-shard answer still matches the single-host path.
+    ref = eng.run(q2, "sql_structured")
+    np.testing.assert_allclose(r2.coadd, ref.coadd, atol=1e-2, rtol=1e-4)
+    np.testing.assert_array_equal(r2.depth, ref.depth)
+
+
+def test_distributed_empty_jobs(survey):
+    """Edge guards: empty query list, and a selection matching nothing."""
+    import jax
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eng = CoaddEngine(survey, pack_capacity=16)
+    assert eng.run_distributed([], mesh) == []
+    # Far outside the survey footprint: zero coadds, no phantom image padded
+    # through the map stage, no device dispatch at all.
+    q = CoaddQuery(band="r", ra_bounds=(200.0, 201.0), dec_bounds=(50.0, 51.0),
+                   npix=32)
+    before = eng.dispatch_count
+    res = eng.run_distributed([q, q], mesh)
+    assert eng.dispatch_count == before
+    assert len(res) == 2
+    for r in res:
+        assert r.stats.dispatches == 0
+        assert r.stats.files_considered == 0
+        assert np.all(r.coadd == 0) and np.all(r.depth == 0)
+
+
 @pytest.mark.slow
 def test_distributed_respects_use_kernel(survey):
     """use_kernel threads through run_distributed's shard_map body."""

@@ -13,7 +13,7 @@ IDS = SpatialIndex.build(SURVEY).select(QUERY)
 
 
 def executor(image_ids):
-    res = ENGINE._sql_gather("structured", QUERY, "sql_structured")
+    res = ENGINE.run(QUERY, "sql_structured")  # noqa: F841 (warms jit caches)
     # Re-run restricted to the shard (deterministic pure function of inputs).
     ids = [i for i in image_ids]
     px = np.stack([SURVEY.images[i].pixels for i in ids])
