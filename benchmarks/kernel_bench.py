@@ -88,30 +88,38 @@ def _seed_dispatches(stats, capacity: int) -> int:
     return stats.packs_touched
 
 
+def _best_run(eng, query, method, repeats):
+    eng.run(query, method)  # warm the jit cache
+    best = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = eng.run(query, method)
+        dt = time.perf_counter() - t0
+        if best is None or dt < best[0]:
+            best = (dt, r)
+    return best
+
+
 def bench_coadd_engine(out_path: str = "BENCH_coadd.json",
                        repeats: int = 3) -> List[str]:
     """All six methods through the one-dispatch engine -> BENCH_coadd.json.
 
-    Records, per method: best us/query and us/image, plus the dispatch
-    counts before (seed per-pack loop) and after (device-resident scan) —
-    the perf trajectory the device-resident refactor is accountable to.
+    Records, per method: best us/query and us/image for both the sparse
+    (gate-aware gather, default) and dense (masked-discard scan of every
+    pack) executors, the gated/scanned/budget pack accounting, and the
+    dispatch counts before (seed per-pack loop) and after — the perf
+    trajectory the sparse-execution refactor is accountable to.
     """
     from benchmarks.paper_tables import QUERY_LARGE, get_engine
     from repro.core import METHODS
 
     eng = get_engine()
+    eng_dense = get_engine(sparse=False)
     methods: Dict[str, Dict] = {}
     rows = []
     for m in METHODS:
-        eng.run(QUERY_LARGE, m)  # warm the jit cache
-        best = None
-        for _ in range(repeats):
-            t0 = time.perf_counter()
-            r = eng.run(QUERY_LARGE, m)
-            dt = time.perf_counter() - t0
-            if best is None or dt < best[0]:
-                best = (dt, r)
-        dt, r = best
+        dt, r = _best_run(eng, QUERY_LARGE, m, repeats)
+        dt_dense, r_dense = _best_run(eng_dense, QUERY_LARGE, m, repeats)
         s = r.stats
         cap = eng.dataset("per_file" if m.startswith("raw_fits")
                           else ("unstructured" if "unstructured" in m
@@ -120,17 +128,26 @@ def bench_coadd_engine(out_path: str = "BENCH_coadd.json",
         methods[m] = {
             "us_per_query": dt * 1e6,
             "us_per_image": dt * 1e6 / n_img,
+            "us_per_query_dense": dt_dense * 1e6,
+            "speedup_vs_dense": dt_dense / dt,
             "dispatches_before": _seed_dispatches(s, cap),
             "dispatches_after": s.dispatches,
             "files_considered": s.files_considered,
             "files_contributing": s.files_contributing,
             "packs_touched": s.packs_touched,
+            "packs_gated": s.packs_gated,
+            "packs_scanned": s.packs_scanned,
+            "scan_budget": s.scan_budget,
+            "packs_scanned_dense": r_dense.stats.packs_scanned,
             "t_locate_s": s.t_locate_s,
             "t_map_reduce_s": s.t_map_reduce_s,
+            "t_map_reduce_dense_s": r_dense.stats.t_map_reduce_s,
         }
         rows.append(
             f"coadd/{m},{dt*1e6/n_img:.1f},"
-            f"dispatches={s.dispatches}(was {methods[m]['dispatches_before']})"
+            f"dispatches={s.dispatches}(was {methods[m]['dispatches_before']});"
+            f"scanned={s.packs_scanned}/{r_dense.stats.packs_scanned};"
+            f"speedup_vs_dense={dt_dense/dt:.2f}x"
         )
     batched = _bench_batched(eng, repeats=repeats)
     for bs, rec in sorted(batched.items(), key=lambda kv: int(kv[0])):
@@ -138,17 +155,70 @@ def bench_coadd_engine(out_path: str = "BENCH_coadd.json",
             f"coadd/batched/b{bs},{rec['us_per_image']:.1f},"
             f"us_per_query={rec['us_per_query']:.0f};dispatches={rec['dispatches']}"
         )
+    sel_rows, selectivity = _bench_selectivity(eng, eng_dense, repeats=repeats)
+    rows += sel_rows
     payload = {
         "npix": QUERY_LARGE.npix,
         "n_images": eng.dataset("per_file").n_packs,
         "pack_uploads": eng.pack_upload_count,
         "methods": methods,
         "batched": batched,
+        "selectivity": selectivity,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     rows.append(f"coadd/json,{0:.0f},wrote={out_path}")
     return rows
+
+
+def _bench_selectivity(eng, eng_dense, repeats: int = 1,
+                       widths=(1.0, 0.5, 0.25, 0.125)) -> tuple:
+    """Sparse-vs-dense us/query as query radius (fraction gated) shrinks.
+
+    The paper's Fig. 8 argument on the execute side: shrinking the query
+    footprint gates fewer packs, and the sparse path's cost should fall
+    with it while the dense scan stays flat.  Uses npix=64 so each budget
+    bucket's compile stays cheap; the curve, not the absolute time, is the
+    product.
+    """
+    from benchmarks.paper_tables import QUERY_LARGE
+    from repro.core import CoaddQuery
+
+    sweep_methods = ("raw_fits_prefiltered", "structured_seq_prefiltered")
+    rows: List[str] = []
+    out: List[Dict] = []
+    ra0 = QUERY_LARGE.ra_bounds[0]
+    full = QUERY_LARGE.ra_bounds[1] - QUERY_LARGE.ra_bounds[0]
+    dec0 = QUERY_LARGE.dec_bounds[0]
+    dec_full = QUERY_LARGE.dec_bounds[1] - QUERY_LARGE.dec_bounds[0]
+    for m in sweep_methods:
+        exec_ds, _ = eng.exec_dataset(
+            "per_file" if m.startswith("raw_fits") else "structured"
+        )
+        for wfrac in widths:
+            q = CoaddQuery(
+                band=QUERY_LARGE.band,
+                ra_bounds=(ra0, ra0 + full * wfrac),
+                dec_bounds=(dec0, dec0 + dec_full * wfrac),
+                npix=64,
+            )
+            dt_s, r_s = _best_run(eng, q, m, repeats)
+            dt_d, _ = _best_run(eng_dense, q, m, repeats)
+            frac = r_s.stats.packs_gated / max(exec_ds.n_packs, 1)
+            out.append({
+                "method": m,
+                "width_frac": wfrac,
+                "frac_packs_gated": frac,
+                "packs_gated": r_s.stats.packs_gated,
+                "scan_budget": r_s.stats.scan_budget,
+                "us_per_query_sparse": dt_s * 1e6,
+                "us_per_query_dense": dt_d * 1e6,
+            })
+            rows.append(
+                f"coadd/selectivity/{m}/w{wfrac},{dt_s*1e6:.0f},"
+                f"frac_gated={frac:.3f};dense={dt_d*1e6:.0f}"
+            )
+    return rows, out
 
 
 def _bench_batched(eng, repeats: int = 3,

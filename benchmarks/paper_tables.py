@@ -29,13 +29,24 @@ BENCH_SURVEY = SurveyConfig(
 QUERY_LARGE = CoaddQuery(band="r", ra_bounds=(37.6, 38.6), dec_bounds=(-0.55, 0.45), npix=128)
 QUERY_SMALL = CoaddQuery(band="r", ra_bounds=(38.0, 38.25), dec_bounds=(-0.2, 0.05), npix=128)
 
-_ENGINE_CACHE: Dict[int, CoaddEngine] = {}
+_ENGINE_CACHE: Dict[bool, CoaddEngine] = {}
+_SURVEY_CACHE: Dict[int, object] = {}
 
 
-def get_engine() -> CoaddEngine:
-    if 0 not in _ENGINE_CACHE:
-        _ENGINE_CACHE[0] = CoaddEngine(make_survey(BENCH_SURVEY), pack_capacity=64)
-    return _ENGINE_CACHE[0]
+def get_survey():
+    if 0 not in _SURVEY_CACHE:
+        _SURVEY_CACHE[0] = make_survey(BENCH_SURVEY)
+    return _SURVEY_CACHE[0]
+
+
+def get_engine(sparse: bool = True) -> CoaddEngine:
+    """Benchmark engines share one survey; sparse=False is the dense-scan
+    baseline the sparse-execution rows are compared against."""
+    if sparse not in _ENGINE_CACHE:
+        _ENGINE_CACHE[sparse] = CoaddEngine(
+            get_survey(), pack_capacity=64, sparse=sparse
+        )
+    return _ENGINE_CACHE[sparse]
 
 
 def bench_table1(repeats: int = 3) -> List[str]:

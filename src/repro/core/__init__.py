@@ -7,7 +7,13 @@ Public API:
 
 from repro.core.engine import METHODS, CoaddEngine, CoaddResult, JobStats
 from repro.core.jobtracker import FailureInjector, JobTracker, MapTask
-from repro.core.plan import CoaddPlan, stack_plans
+from repro.core.plan import (
+    CoaddPlan,
+    SparseScanIndex,
+    scan_budget,
+    sparse_pack_index,
+    stack_plans,
+)
 from repro.core.prefilter import SpatialIndex
 from repro.core.query import BANDS, CoaddQuery
 from repro.core.survey import Survey, SurveyConfig, make_survey
@@ -23,9 +29,12 @@ __all__ = [
     "JobTracker",
     "MapTask",
     "METHODS",
+    "SparseScanIndex",
     "SpatialIndex",
     "Survey",
     "SurveyConfig",
     "make_survey",
+    "scan_budget",
+    "sparse_pack_index",
     "stack_plans",
 ]

@@ -40,6 +40,14 @@ to that common PSF width using a host-precomputed per-slot kernel bank
 (`psf.matching_kernel_bank` over the layout's ``psf_sigma`` metadata) —
 threaded as a plain operand through both the XLA mapper and the Pallas
 ``coadd_fused`` kernel.
+
+Sparse execution (DESIGN.md §5, default on): the planner's gate also sets
+the *scan extent*.  Each executor gathers just the packs the gate opens out
+of the resident arrays (``jnp.take`` over a budget-bucketed pack-index
+vector) and scans the compacted result, so map cost tracks ``packs_gated``
+rather than the layout size; the degenerate per-file layout is additionally
+reblocked into dense super-packs at residency time.  ``sparse=False``
+restores the dense masked-discard scan over every pack.
 """
 
 from __future__ import annotations
@@ -55,7 +63,15 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import mapper, psf, reducer
-from repro.core.plan import CoaddPlan, stack_plans
+from repro.core.plan import (
+    CoaddPlan,
+    SparseScanIndex,
+    compact_gate,
+    compact_gates,
+    sparse_pack_index,
+    stack_plans,
+    union_sparse_index,
+)
 from repro.core.prefilter import (
     SpatialIndex,
     camcol_dec_table,
@@ -67,12 +83,17 @@ from repro.core.seqfile import (
     DevicePackedDataset,
     MeshResidentDataset,
     PackedDataset,
+    SlotRemap,
     pack_per_file,
     pack_structured,
     pack_unstructured,
 )
 from repro.core.survey import Survey
-from repro.distributed.sharding import shard_map_compat
+from repro.distributed.sharding import (
+    shard_count,
+    shard_local_compaction,
+    shard_map_compat,
+)
 from repro.kernels.warp import ops as warp_ops
 
 METHODS = (
@@ -90,11 +111,28 @@ class JobStats:
     method: str
     files_considered: int          # mapper input records (Table 2)
     files_contributing: int        # actual coverage
-    packs_touched: int             # "mapper objects" locality proxy (§4.1.4)
+    packs_touched: int             # "mapper objects" locality proxy (§4.1.4):
+                                   #   distinct planning-layout containers the
+                                   #   gate opens; `run_distributed` reports
+                                   #   mesh shard slabs touched by the flat
+                                   #   gate (pack identity is lost there)
     t_locate_s: float              # job-init: prefilter/index/gather ("RPC")
     t_map_reduce_s: float          # device compute
     t_total_s: float
     dispatches: int = 1            # jitted device dispatches for this query
+    # Sparse-execution accounting (DESIGN.md §5) — gated vs scanned work:
+    packs_gated: int = 0           # execution-layout packs the gate opens
+    packs_scanned: int = 0         # pack-axis scan steps actually executed;
+                                   #   additive: batched/distributed jobs
+                                   #   attribute the job's scan work to the
+                                   #   first result (like dispatches), and
+                                   #   run_distributed counts all shards
+                                   #   (n_shards * scan_budget)
+    scan_budget: int = 0           # static per-program bucket the scan
+                                   #   compiled for (n_packs if dense; the
+                                   #   per-shard budget in run_distributed);
+                                   #   descriptive, not additive — every
+                                   #   result in a job reports it
 
 
 @dataclasses.dataclass
@@ -160,6 +198,7 @@ def _scan_coadd(
     use_kernel,
     block_rows,
     interpret,
+    pack_idx=None,  # (G,) int32 — sparse: scan only these packs of the layout
 ):
     """The whole query in ONE XLA program: scan packs, fuse map+reduce.
 
@@ -170,11 +209,17 @@ def _scan_coadd(
     count is 1 regardless of n_packs.  Non-gated slots contribute exact
     zeros (masked SPMD discard, Fig. 6).  Counts come back as device
     scalars: no per-pack host syncs.
+
+    Sparse mode (``pack_idx`` given, DESIGN.md §5): the scan iterates the
+    budget-bucketed index vector instead of the pack axis, and each step
+    *streams* its pack out of the resident arrays (`mapper.gather_packs`
+    with a scalar index) — the gather rides inside the scan, so no
+    (G, cap, H, W) compacted copy ever materializes next to the resident
+    layout.  ``gate`` must then be the (G, cap) compacted gate.
     """
 
-    def step(carry, xs):
+    def body(carry, px, wv, ints_p, floats_p, kern_p, gate_p):
         coadd, depth, contrib = carry
-        px, wv, ints_p, floats_p, kern_p, gate_p = xs
         accept = _accept_from_meta(ints_p, floats_p, qvec) & gate_p
         if use_kernel:
             c, d = warp_ops.coadd_fused(
@@ -194,15 +239,29 @@ def _scan_coadd(
             c, d = reducer.reduce_local(tiles, covs)
         return (coadd + c, depth + d, contrib + accept.sum()), None
 
+    if pack_idx is None:
+        def step(carry, xs):
+            px, wv, ints_p, floats_p, kern_p, gate_p = xs
+            return body(carry, px, wv, ints_p, floats_p, kern_p, gate_p)
+
+        xs = (pixels, wcs, ints, floats, psf_kernels, gate)
+    else:
+        def step(carry, xs):
+            i, gate_p = xs
+            px, wv, ints_p, floats_p, kern_p = mapper.gather_packs(
+                i, pixels, wcs, ints, floats, psf_kernels
+            )
+            return body(carry, px, wv, ints_p, floats_p, kern_p, gate_p)
+
+        xs = (pack_idx, gate)
+
     q = grid_ra.shape[0]
     init = (
         jnp.zeros((q, q), jnp.float32),
         jnp.zeros((q, q), jnp.float32),
         jnp.zeros((), jnp.int32),
     )
-    (coadd, depth, contrib), _ = jax.lax.scan(
-        step, init, (pixels, wcs, ints, floats, psf_kernels, gate)
-    )
+    (coadd, depth, contrib), _ = jax.lax.scan(step, init, xs)
     return coadd, depth, contrib, gate.sum()
 
 
@@ -239,6 +298,48 @@ def _coadd_scan_batch(
     return jax.vmap(one)(gates, qvecs, grids_ra, grids_dec)
 
 
+@partial(jax.jit, static_argnames=("use_kernel", "block_rows", "interpret"))
+def _coadd_scan_sparse(
+    pixels, wcs, ints, floats, psf_kernels, pack_idx, gate, qvec, grid_ra,
+    grid_dec, use_kernel=False, block_rows=8, interpret=True,
+):
+    """Sparse plan against a resident layout, still ONE jitted program.
+
+    The scan iterates the budget-bucketed (G,) index vector, streaming each
+    gated pack out of the resident arrays per step — G scan steps instead of
+    P, no compacted pixel copy.  ``gate`` arrives pre-compacted
+    (`plan.compact_gate`), so padding rows are all-False and the
+    considered/contributing counts match the dense scan exactly.
+    """
+    return _scan_coadd(
+        pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+        use_kernel, block_rows, interpret, pack_idx=pack_idx,
+    )
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_rows", "interpret"))
+def _coadd_scan_batch_sparse(
+    pixels, wcs, ints, floats, psf_kernels, pack_idx, gates, qvecs, grids_ra,
+    grids_dec, use_kernel=False, block_rows=8, interpret=True,
+):
+    """K stacked plans over the union of their gated packs, ONE program.
+
+    The gather set is the union across queries (`plan.union_sparse_index`);
+    the vmapped per-query gates re-select each query's slots within it —
+    preserving the K-queries-one-dispatch property while map work scales
+    with the union's selectivity.  The index vector is shared (not vmapped):
+    every query's scan streams the same G packs.
+    """
+
+    def one(gate, qvec, grid_ra, grid_dec):
+        return _scan_coadd(
+            pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra,
+            grid_dec, use_kernel, block_rows, interpret, pack_idx=pack_idx,
+        )
+
+    return jax.vmap(one)(gates, qvecs, grids_ra, grids_dec)
+
+
 class CoaddEngine:
     """Plans queries on the host, executes them against resident layouts.
 
@@ -259,15 +360,22 @@ class CoaddEngine:
         block_rows: Optional[int] = None,
         kernel_interpret: bool = True,
         match_psf_sigma: Optional[float] = None,
+        sparse: bool = True,
     ):
         self.survey = survey
         self.use_kernel = use_kernel
         self.block_rows = block_rows  # None -> autotune per (npix, H, W)
         self.kernel_interpret = kernel_interpret
         self.match_psf_sigma = match_psf_sigma
+        # Sparse execution (DESIGN.md §5): gather only the packs a gate
+        # opens before scanning, and reblock degenerate layouts at residency
+        # time.  False reproduces the dense masked-discard scan over every
+        # pack — kept as the parity/benchmark baseline.
+        self.sparse = sparse
         self.camcol_dec = camcol_dec_table(survey)
         self.sql = SpatialIndex.build(survey)
         self._datasets: Dict[str, PackedDataset] = {}
+        self._exec_cache: Dict[str, Tuple[PackedDataset, Optional[SlotRemap]]] = {}
         self._device_cache: Dict[str, DevicePackedDataset] = {}
         self._mesh_cache: Dict[Tuple, MeshResidentDataset] = {}
         self._psf_banks: Dict[str, np.ndarray] = {}
@@ -294,10 +402,29 @@ class CoaddEngine:
                 raise ValueError(layout)
         return self._datasets[layout]
 
+    def exec_dataset(self, layout: str) -> Tuple[PackedDataset, Optional[SlotRemap]]:
+        """Execution-side form of a layout + the gate remap onto it.
+
+        Planning always sees the layout as the method defines it (per-file
+        gating stays per-file); execution may re-pack it for scan efficiency.
+        The per-file layout's (P=N, cap=1) geometry makes every scan step a
+        one-image pack — pure scan overhead — so under sparse execution it is
+        reblocked into dense ``pack_capacity``-slot super-packs at residency
+        time, and plan gates are rewritten through the returned `SlotRemap`.
+        """
+        if layout not in self._exec_cache:
+            ds = self.dataset(layout)
+            if self.sparse and layout == "per_file" and ds.capacity < self._pack_capacity:
+                self._exec_cache[layout] = ds.reblock(self._pack_capacity)
+            else:
+                self._exec_cache[layout] = (ds, None)
+        return self._exec_cache[layout]
+
     def device_dataset(self, layout: str) -> DevicePackedDataset:
         """Device-resident form of a layout; uploaded once, then cached."""
         if layout not in self._device_cache:
-            self._device_cache[layout] = self.dataset(layout).to_device()
+            exec_ds, _ = self.exec_dataset(layout)
+            self._device_cache[layout] = exec_ds.to_device()
             self.pack_upload_count += 1
         return self._device_cache[layout]
 
@@ -311,7 +438,8 @@ class CoaddEngine:
         """
         key = (layout, mesh, tuple(shard_axes))
         if key not in self._mesh_cache:
-            self._mesh_cache[key] = self.dataset(layout).to_mesh(
+            exec_ds, _ = self.exec_dataset(layout)
+            self._mesh_cache[key] = exec_ds.to_mesh(
                 mesh, tuple(shard_axes), psf_kernels=self.psf_kernel_bank(layout)
             )
             self.mesh_upload_count += 1
@@ -323,9 +451,11 @@ class CoaddEngine:
         if self.match_psf_sigma is None:
             return None
         if layout not in self._psf_banks:
-            ds = self.dataset(layout)
+            # Built against the *execution* form so the (P, cap) bank lines
+            # up slot-for-slot with the resident (possibly reblocked) arrays.
+            exec_ds, _ = self.exec_dataset(layout)
             self._psf_banks[layout] = psf.matching_kernel_bank(
-                ds.floats["psf_sigma"], self.match_psf_sigma
+                exec_ds.floats["psf_sigma"], self.match_psf_sigma
             )
         return self._psf_banks[layout]
 
@@ -410,31 +540,80 @@ class CoaddEngine:
     def plan_sql_structured(self, query: CoaddQuery) -> CoaddPlan:
         return self._plan_sql("structured", query, "sql_structured")
 
+    def _exec_gate(self, plan: CoaddPlan) -> np.ndarray:
+        """A plan's gate in execution-layout coordinates (remapped if reblocked)."""
+        _, remap = self.exec_dataset(plan.layout)
+        return remap.apply(plan.gate) if remap is not None else plan.gate
+
+    def _sparse_index(self, gate_or_gates: np.ndarray) -> Optional[SparseScanIndex]:
+        """The gather plan for a gate (or gate stack), or None for dense.
+
+        Sparse execution only pays when the budget bucket is smaller than
+        the layout — a full-archive gate (raw_fits, unstructured_seq)
+        degrades gracefully to the dense scan of the same program shape.
+        """
+        if not self.sparse:
+            return None
+        sp = (
+            union_sparse_index(gate_or_gates)
+            if gate_or_gates.ndim == 3
+            else sparse_pack_index(gate_or_gates)
+        )
+        return sp if sp.worthwhile else None
+
     # ----- execution: one dispatch against resident data -----
     def execute(self, plan: CoaddPlan) -> CoaddResult:
-        """One-dispatch query: device-resident packs + (P, cap) slot gate."""
+        """One-dispatch query: device-resident packs + (P, cap) slot gate.
+
+        With sparse execution on, the gate's padded pack-index vector is
+        derived host-side and the jitted program gathers just those packs
+        before scanning (`_coadd_scan_sparse`) — map work scales with
+        `packs_gated` instead of the layout size, still in one dispatch.
+        """
         ds = self.dataset(plan.layout)
+        exec_ds, _ = self.exec_dataset(plan.layout)
         dev = self.device_dataset(plan.layout)
+        gate = self._exec_gate(plan)
         grid_ra, grid_dec = self._grids(plan.query)
         block_rows = self._block_rows(plan.query, ds)
+        psf_kernels = self._device_psf_kernels(plan.layout)
+        sp = self._sparse_index(gate)
         t1 = time.perf_counter()
         self.dispatch_count += 1
-        coadd, depth, contrib, considered = _coadd_scan(
-            dev.pixels,
-            dev.wcs,
-            dev.ints,
-            dev.floats,
-            self._device_psf_kernels(plan.layout),
-            jnp.asarray(plan.gate),
-            jnp.asarray(plan.qvec),
-            grid_ra,
-            grid_dec,
-            use_kernel=self.use_kernel,
-            block_rows=block_rows,
-            interpret=self.kernel_interpret,
-        )
+        if sp is not None:
+            coadd, depth, contrib, considered = _coadd_scan_sparse(
+                dev.pixels,
+                dev.wcs,
+                dev.ints,
+                dev.floats,
+                psf_kernels,
+                jnp.asarray(sp.pack_idx),
+                jnp.asarray(compact_gate(gate, sp)),
+                jnp.asarray(plan.qvec),
+                grid_ra,
+                grid_dec,
+                use_kernel=self.use_kernel,
+                block_rows=block_rows,
+                interpret=self.kernel_interpret,
+            )
+        else:
+            coadd, depth, contrib, considered = _coadd_scan(
+                dev.pixels,
+                dev.wcs,
+                dev.ints,
+                dev.floats,
+                psf_kernels,
+                jnp.asarray(gate),
+                jnp.asarray(plan.qvec),
+                grid_ra,
+                grid_dec,
+                use_kernel=self.use_kernel,
+                block_rows=block_rows,
+                interpret=self.kernel_interpret,
+            )
         coadd.block_until_ready()
         t2 = time.perf_counter()
+        scanned = sp.budget if sp is not None else exec_ds.n_packs
         stats = JobStats(
             method=plan.method,
             files_considered=int(considered),
@@ -444,6 +623,9 @@ class CoaddEngine:
             t_map_reduce_s=t2 - t1,
             t_total_s=plan.t_locate_s + (t2 - t1),
             dispatches=1,
+            packs_gated=int(gate.any(axis=1).sum()),
+            packs_scanned=scanned,
+            scan_budget=scanned,
         )
         return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
 
@@ -461,36 +643,64 @@ class CoaddEngine:
         return self.execute_batch([self.plan(q, method) for q in queries])
 
     def execute_batch(self, plans: Sequence[CoaddPlan]) -> List[CoaddResult]:
-        """Stacked plans -> one vmapped scan dispatch -> per-query results."""
+        """Stacked plans -> one vmapped scan dispatch -> per-query results.
+
+        Sparse batches compact against the *union* of the gates' packs
+        (`union_sparse_index`), each query's compacted gate re-selecting its
+        own slots — K queries remain ONE dispatch over one gathered layout.
+        """
         plans = list(plans)
         gates, qvecs = stack_plans(plans)
         layout = plans[0].layout
         ds = self.dataset(layout)
+        exec_ds, remap = self.exec_dataset(layout)
+        if remap is not None:
+            gates = np.stack([remap.apply(g) for g in gates])
         dev = self.device_dataset(layout)
         grids = [self._grids(p.query) for p in plans]
         grids_ra = jnp.stack([g[0] for g in grids])
         grids_dec = jnp.stack([g[1] for g in grids])
         block_rows = self._block_rows(plans[0].query, ds)
+        psf_kernels = self._device_psf_kernels(layout)
+        sp = self._sparse_index(gates)
         t1 = time.perf_counter()
         self.dispatch_count += 1
-        coadds, depths, contribs, considered = _coadd_scan_batch(
-            dev.pixels,
-            dev.wcs,
-            dev.ints,
-            dev.floats,
-            self._device_psf_kernels(layout),
-            jnp.asarray(gates),
-            jnp.asarray(qvecs),
-            grids_ra,
-            grids_dec,
-            use_kernel=self.use_kernel,
-            block_rows=block_rows,
-            interpret=self.kernel_interpret,
-        )
+        if sp is not None:
+            coadds, depths, contribs, considered = _coadd_scan_batch_sparse(
+                dev.pixels,
+                dev.wcs,
+                dev.ints,
+                dev.floats,
+                psf_kernels,
+                jnp.asarray(sp.pack_idx),
+                jnp.asarray(compact_gates(gates, sp)),
+                jnp.asarray(qvecs),
+                grids_ra,
+                grids_dec,
+                use_kernel=self.use_kernel,
+                block_rows=block_rows,
+                interpret=self.kernel_interpret,
+            )
+        else:
+            coadds, depths, contribs, considered = _coadd_scan_batch(
+                dev.pixels,
+                dev.wcs,
+                dev.ints,
+                dev.floats,
+                psf_kernels,
+                jnp.asarray(gates),
+                jnp.asarray(qvecs),
+                grids_ra,
+                grids_dec,
+                use_kernel=self.use_kernel,
+                block_rows=block_rows,
+                interpret=self.kernel_interpret,
+            )
         coadds.block_until_ready()
         t2 = time.perf_counter()
         contribs = np.asarray(contribs)
         considered = np.asarray(considered)
+        scanned = sp.budget if sp is not None else exec_ds.n_packs
         results = []
         for i, p in enumerate(plans):
             # One dispatch — and one wall-clock interval — serves the whole
@@ -506,6 +716,9 @@ class CoaddEngine:
                 t_map_reduce_s=t_mr,
                 t_total_s=p.t_locate_s + t_mr,
                 dispatches=1 if i == 0 else 0,
+                packs_gated=int(gates[i].any(axis=1).sum()),
+                packs_scanned=scanned if i == 0 else 0,
+                scan_budget=scanned,
             )
             results.append(
                 CoaddResult(np.asarray(coadds[i]), np.asarray(depths[i]), stats)
@@ -525,9 +738,11 @@ class CoaddEngine:
         The structured layout is sharded over the data axes ONCE
         (`mesh_dataset`; cached per mesh) so repeat jobs move zero pixel
         bytes; each job ships per-query flat slot gates (exact spatial-index
-        selection, i.e. the paper's best method), every device maps its
-        resident shard for every query, and reduction is psum over data axes
-        + reduce-scatter of output rows over the model axis (`reducer.py`).
+        selection, i.e. the paper's best method), every device maps the
+        *gated* entries of its resident slab (per-shard local compaction —
+        dense fallback maps the whole slab), and reduction is psum over data
+        axes + reduce-scatter of output rows over the model axis
+        (`reducer.py`).
         """
         queries = list(queries)
         if not queries:
@@ -578,11 +793,35 @@ class CoaddEngine:
         # outside the locate window so first-job and repeat-job stats are
         # comparable — mirroring how execute() leaves device_dataset untimed.
         mds = self.mesh_dataset("structured", mesh, shard_axes)
+        n_shards = shard_count(mesh, shard_axes)
+        local_len = mds.n_flat // n_shards
         t0 = time.perf_counter()
         # Per-job host->mesh traffic: gates + qvecs + grids. No pixels.
         gates = np.stack(
             [ds.flat_slot_mask(ids, pad_to=mds.n_flat) for ids in id_sets]
         )
+        # Per-shard local compaction (DESIGN.md §5): each shard gathers only
+        # the slab entries some query in the job selected, padded to one
+        # shared static budget — tiny queries on big meshes stop mapping
+        # every resident image.  The shipped per-query gates are compacted
+        # to the same local coordinates; padding is masked False.
+        local_idx = pad_mask = None
+        scan_budget_local = local_len
+        if self.sparse:
+            local_idx, pad_mask, budget = shard_local_compaction(
+                gates.any(axis=0), n_shards
+            )
+            if budget < local_len:
+                scan_budget_local = budget
+                per_shard = gates.reshape(len(queries), n_shards, local_len)
+                gates_exec = (
+                    np.take_along_axis(per_shard, local_idx[None], axis=2)
+                    & pad_mask[None]
+                ).reshape(len(queries), n_shards * budget)
+            else:
+                local_idx = None
+        if local_idx is None:
+            gates_exec = gates
         t_locate += time.perf_counter() - t0
         block_rows = self._block_rows(queries[0], ds)
 
@@ -597,11 +836,25 @@ class CoaddEngine:
         # Optional operands ride as (possibly empty) tuples so the shard_map
         # in_specs tree matches with or without PSF matching enabled.
         kern_t = () if mds.psf_kernels is None else (mds.psf_kernels,)
+        # Likewise for the sparse local gather indices: shard s receives its
+        # (budget,) row of local slab indices, sharded exactly like the data.
+        idx_t = (
+            () if local_idx is None
+            else (jnp.asarray(local_idx.reshape(-1)),)
+        )
 
-        def job(px, wv, ints_flat, floats_flat, kern_t, gates, qvecs, grids):
+        def job(px, wv, ints_flat, floats_flat, kern_t, idx_t, gates, qvecs, grids):
             ints = dict(zip(meta_keys_i, ints_flat))
             floats = dict(zip(meta_keys_f, floats_flat))
             kern = kern_t[0] if kern_t else None
+            if idx_t:
+                # Local compaction: map only the slab entries the job gated.
+                idx = idx_t[0]
+                px = jnp.take(px, idx, axis=0)
+                wv = jnp.take(wv, idx, axis=0)
+                ints = {k: jnp.take(v, idx, axis=0) for k, v in ints.items()}
+                floats = {k: jnp.take(v, idx, axis=0) for k, v in floats.items()}
+                kern = None if kern is None else jnp.take(kern, idx, axis=0)
 
             def one_query(gate, qvec, grid):
                 accept = _accept_from_meta(ints, floats, qvec) & gate
@@ -634,6 +887,7 @@ class CoaddEngine:
                 (in_spec,) * len(meta_keys_i),
                 (in_spec,) * len(meta_keys_f),
                 (in_spec,) * len(kern_t),
+                (in_spec,) * len(idx_t),
                 P(None, shard_axes),
                 P(None),
                 P(None),
@@ -649,27 +903,37 @@ class CoaddEngine:
             tuple(mds.ints[k] for k in meta_keys_i),
             tuple(mds.floats[k] for k in meta_keys_f),
             kern_t,
-            jnp.asarray(gates),
+            idx_t,
+            jnp.asarray(gates_exec),
             jnp.asarray(qvecs),
             jnp.asarray(grids),
         )
         coadds.block_until_ready()
         t2 = time.perf_counter()
 
-        packs_union = len({ds.index[int(i)][0] for i in all_ids})
+        # Locality stats derive from the *flat* gate the mesh actually
+        # executes: pack identity is lost in the flattened layout, so the
+        # honest "containers opened" count is resident shard slabs touched
+        # (see JobStats.packs_touched).
+        shards_touched = [
+            int(g.reshape(n_shards, local_len).any(axis=1).sum()) for g in gates
+        ]
         results = []
         for qi, q in enumerate(queries):
             stats = JobStats(
                 method="distributed_sql_structured",
                 files_considered=len(all_ids),
                 files_contributing=len(id_sets[qi]),
-                packs_touched=packs_union,
+                packs_touched=shards_touched[qi],
                 t_locate_s=t_locate,
                 t_map_reduce_s=t2 - t1,
                 t_total_s=t_locate + (t2 - t1),
                 # One shard_map dispatch serves the whole multi-query job;
                 # attribute it to the first result so summing stats is honest.
                 dispatches=1 if qi == 0 else 0,
+                packs_gated=shards_touched[qi],
+                packs_scanned=n_shards * scan_budget_local if qi == 0 else 0,
+                scan_budget=scan_budget_local,
             )
             results.append(
                 CoaddResult(np.asarray(coadds[qi]), np.asarray(depths[qi]), stats)

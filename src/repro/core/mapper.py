@@ -116,6 +116,37 @@ def acceptance_mask(
     return ok
 
 
+def gather_packs(
+    pack_idx: jnp.ndarray,   # scalar (or (G,)) int32 pack index/indices
+    pixels: jnp.ndarray,     # (P, cap, H, W) resident
+    wcs_vecs: jnp.ndarray,   # (P, cap, 8)
+    ints: dict,              # (P, cap) int32 columns
+    floats: dict,            # (P, cap) float32 columns
+    psf_kernels: jnp.ndarray | None = None,  # (P, cap, K) or None
+):
+    """Gather gated pack(s) out of the resident arrays along the pack axis.
+
+    The device half of sparse execution (DESIGN.md §5): the planner derives
+    which packs a gate opens (`plan.sparse_pack_index`), and this `jnp.take`
+    pulls them from the resident (P, cap, ...) arrays *inside* the jitted
+    program — the scan then visits G packs instead of P, so map cost scales
+    with selectivity while the dispatch count stays 1.  The engine calls it
+    per scan step with a scalar traced index (a dynamic slice of one pack),
+    which streams the gather through the scan instead of materializing a
+    (G, cap, ...) compacted copy next to the resident layout.  Padding
+    entries duplicate pack 0; the compacted gate masks their slots False,
+    so they contribute exact zeros like any masked discard.
+    """
+    take = lambda a: jnp.take(a, pack_idx, axis=0)  # noqa: E731
+    return (
+        take(pixels),
+        take(wcs_vecs),
+        {k: take(v) for k, v in ints.items()},
+        {k: take(v) for k, v in floats.items()},
+        None if psf_kernels is None else take(psf_kernels),
+    )
+
+
 def map_batch(
     pixels: jnp.ndarray,     # (N, H, W)
     wcs_vecs: jnp.ndarray,   # (N, 8)

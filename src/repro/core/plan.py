@@ -13,6 +13,16 @@ executes one against the device-resident layout, `run_batch` stacks several
 plans for a shared layout into one vmapped dispatch (the paper's Fig. 5
 multi-query amortization), and `run_distributed` builds the flattened
 equivalent against a mesh-resident layout.
+
+Sparse execution (DESIGN.md §5): a gate also *plans the scan extent*.  The
+paper's central win is refusing to pay mapper cost for images a query does
+not need (SQL prefiltering, Fig. 8); `sparse_pack_index` carries that win
+across the execute boundary by deriving from a gate the list of pack indices
+it actually opens, padded up to a static *budget bucket* (powers of two,
+capped at P) so a handful of compiled programs serve every selectivity.  The
+executor gathers just those packs out of the resident layout with
+``jnp.take`` and scans the compacted arrays — map work scales with
+``packs_touched`` instead of P.
 """
 
 from __future__ import annotations
@@ -46,6 +56,82 @@ class CoaddPlan:
         return int(self.gate.any(axis=1).sum())
 
 
+def scan_budget(n_gated: int, n_packs: int) -> int:
+    """Static scan extent for a gate opening ``n_gated`` of ``n_packs`` packs.
+
+    Buckets to the next power of two (minimum 1, capped at ``n_packs``) so
+    the number of distinct compiled sparse programs per layout is bounded by
+    log2(P) — selectivity varies per query, recompiles don't.  An empty gate
+    still budgets one pack: the executor scans a single all-False slot row,
+    which yields an exact-zero coadd without a zero-length scan.
+    """
+    if n_packs <= 0:
+        raise ValueError(f"n_packs must be positive, got {n_packs}")
+    n = max(int(n_gated), 1)
+    bucket = 1
+    while bucket < n:
+        bucket <<= 1
+    return min(bucket, n_packs)
+
+
+@dataclasses.dataclass
+class SparseScanIndex:
+    """A gate's padded pack-index vector: which packs to gather, and how many.
+
+    ``pack_idx`` has static length ``budget`` (= `scan_budget` bucket);
+    entries past ``n_gated`` are padding (index 0) that the compacted gate
+    masks to all-False, so duplicates contribute exact zeros.
+    """
+
+    pack_idx: np.ndarray   # (budget,) int32 indices into the pack axis
+    n_gated: int           # packs the gate actually opens
+    budget: int            # static bucket == len(pack_idx)
+    n_packs: int           # pack count of the layout the gate addresses
+
+    @property
+    def worthwhile(self) -> bool:
+        """Gathering pays only when the bucket is smaller than the layout."""
+        return self.budget < self.n_packs
+
+
+def sparse_pack_index(gate: np.ndarray) -> SparseScanIndex:
+    """Derive the padded pack-index vector a (P, cap) gate opens."""
+    packs = np.nonzero(gate.any(axis=1))[0]
+    n_packs = gate.shape[0]
+    budget = scan_budget(len(packs), n_packs)
+    idx = np.zeros((budget,), np.int32)
+    idx[: len(packs)] = packs[:budget]
+    return SparseScanIndex(idx, len(packs), budget, n_packs)
+
+
+def compact_gate(gate: np.ndarray, sp: SparseScanIndex) -> np.ndarray:
+    """(P, cap) gate -> (budget, cap) gate over the gathered packs.
+
+    Padding rows are forced False so the duplicate pack-0 entries `jnp.take`
+    gathers for them are rejected by the acceptance test.
+    """
+    g = gate[sp.pack_idx].copy()
+    g[sp.n_gated :] = False
+    return g
+
+
+def union_sparse_index(gates: np.ndarray) -> SparseScanIndex:
+    """Sparse index for a (K, P, cap) stack of gates: union over queries.
+
+    `run_batch` scans one compacted layout for the whole batch, so the
+    gather set is the union of every query's packs; each query's compacted
+    gate (`compact_gates`) then re-selects its own slots within it.
+    """
+    return sparse_pack_index(gates.any(axis=0))
+
+
+def compact_gates(gates: np.ndarray, sp: SparseScanIndex) -> np.ndarray:
+    """(K, P, cap) gates -> (K, budget, cap) over the union-gathered packs."""
+    g = gates[:, sp.pack_idx].copy()
+    g[:, sp.n_gated :] = False
+    return g
+
+
 def stack_plans(plans: Sequence[CoaddPlan]) -> Tuple[np.ndarray, np.ndarray]:
     """Stack same-layout plans into batched (K, P, cap) gates + (K, 7) qvecs.
 
@@ -66,4 +152,13 @@ def stack_plans(plans: Sequence[CoaddPlan]) -> Tuple[np.ndarray, np.ndarray]:
     return gates, qvecs
 
 
-__all__: List[str] = ["CoaddPlan", "stack_plans"]
+__all__: List[str] = [
+    "CoaddPlan",
+    "SparseScanIndex",
+    "compact_gate",
+    "compact_gates",
+    "scan_budget",
+    "sparse_pack_index",
+    "stack_plans",
+    "union_sparse_index",
+]

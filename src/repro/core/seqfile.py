@@ -90,6 +90,27 @@ class MeshResidentDataset:
 
 
 @dataclasses.dataclass
+class SlotRemap:
+    """Slot-index remap from a layout's (P, cap) grid onto a reblocked one.
+
+    Produced by `PackedDataset.reblock`; `apply` rewrites a plan gate built
+    against the original layout into the reblocked coordinates.  Invalid
+    source slots map to -1 and never appear in a gate (plans AND with
+    ``valid``), so the scatter below only ever writes real destinations.
+    """
+
+    rb_pack: np.ndarray            # (P, cap) int32 — destination pack or -1
+    rb_slot: np.ndarray            # (P, cap) int32 — destination slot or -1
+    shape: Tuple[int, int]         # reblocked (n_packs, capacity)
+
+    def apply(self, gate: np.ndarray) -> np.ndarray:
+        """(P, cap) bool gate -> equivalent gate over the reblocked layout."""
+        out = np.zeros(self.shape, bool)
+        out[self.rb_pack[gate], self.rb_slot[gate]] = True
+        return out
+
+
+@dataclasses.dataclass
 class PackedDataset:
     """A set of sequence-file containers.
 
@@ -209,6 +230,74 @@ class PackedDataset:
             else put(flat(psf_kernels, 0)),
             n_flat=pad_to,
         )
+
+    def reblock(self, capacity: int) -> Tuple["PackedDataset", "SlotRemap"]:
+        """Re-pack into dense super-packs of ``capacity`` slots (DESIGN.md §5).
+
+        The per-file layout is degenerate for the scan executor — (P=N,
+        cap=1) pays one scan step per *image*, so its per-image cost is pure
+        scan overhead relative to cap=64 containers.  Reblocking is a
+        residency-time remedy: occupied slots are re-packed, in (band,
+        camcol) order, into ceil(N/capacity) dense super-packs, and the
+        returned `SlotRemap` rewrites any (P, cap) plan gate into the
+        reblocked coordinates — so planning semantics (which *files* a
+        method locates) are untouched while execution scans ~N/capacity
+        steps.  The (band, camcol) ordering mirrors `pack_structured`'s
+        container key: glob-prefiltered gates select contiguous slot runs,
+        which keeps them sparse in *pack* space too (few super-packs
+        opened), exactly what the sparse gather path wants.
+        """
+        pp, ss = np.nonzero(self.valid)
+        order = np.lexsort(
+            (self.ints["camcol"][pp, ss], self.ints["band_id"][pp, ss])
+        )
+        pp, ss = pp[order], ss[order]
+        n = len(pp)
+        if n == 0:
+            raise ValueError("cannot reblock an empty dataset")
+        n_packs = int(np.ceil(n / capacity))
+        h, w = self.image_hw()
+        dest_p = np.arange(n) // capacity
+        dest_s = np.arange(n) % capacity
+        pixels = np.zeros((n_packs, capacity, h, w), np.float32)
+        wcs = np.zeros((n_packs, capacity, 8), np.float32)
+        valid = np.zeros((n_packs, capacity), bool)
+        ints = {k: np.full((n_packs, capacity), -1, np.int32) for k in self.ints}
+        floats = {k: np.zeros((n_packs, capacity), np.float32) for k in self.floats}
+        pixels[dest_p, dest_s] = self.pixels[pp, ss]
+        wcs[dest_p, dest_s] = self.wcs[pp, ss]
+        valid[dest_p, dest_s] = True
+        for k in self.ints:
+            ints[k][dest_p, dest_s] = self.ints[k][pp, ss]
+        for k in self.floats:
+            floats[k][dest_p, dest_s] = self.floats[k][pp, ss]
+        index = {
+            int(ints["image_id"][p, s]): (int(p), int(s))
+            for p, s in zip(dest_p, dest_s)
+        }
+        # Container keys: uniform within a super-pack or -1 (mixed).
+        def pack_key(col):
+            vals = np.where(valid, col, -1)
+            first = vals[np.arange(n_packs), 0]
+            uniform = np.all((vals == first[:, None]) | ~valid, axis=1)
+            return np.where(uniform, first, -1).astype(np.int32)
+
+        ds = PackedDataset(
+            layout=self.layout,
+            pixels=pixels,
+            wcs=wcs,
+            valid=valid,
+            ints=ints,
+            floats=floats,
+            pack_band=pack_key(ints["band_id"]),
+            pack_camcol=pack_key(ints["camcol"]),
+            index=index,
+        )
+        rb_pack = np.full(self.valid.shape, -1, np.int32)
+        rb_slot = np.full(self.valid.shape, -1, np.int32)
+        rb_pack[pp, ss] = dest_p
+        rb_slot[pp, ss] = dest_s
+        return ds, SlotRemap(rb_pack, rb_slot, (n_packs, capacity))
 
     def gather(self, image_ids: np.ndarray, pad_to: Optional[int] = None):
         """Gather a dense mapper-input batch for an exact id list.

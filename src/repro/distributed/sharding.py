@@ -48,6 +48,43 @@ def image_axis_sharding(mesh: Mesh, shard_axes: Tuple[str, ...]) -> NamedShardin
     return NamedSharding(mesh, P(tuple(shard_axes)))
 
 
+def shard_local_compaction(
+    union_gate: np.ndarray, n_shards: int
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Per-shard gather indices for a job's union flat gate (DESIGN.md §5).
+
+    ``union_gate`` is the (M,) OR of every query's flat slot gate; a
+    NamedSharding over axis 0 gives shard ``s`` the contiguous slab
+    ``[s*L, (s+1)*L)`` with ``L = M // n_shards``.  Each shard should map
+    only the slab entries some query selected, so this derives, per shard,
+    the *local* indices of its gated slots, padded to one shared static
+    budget (`plan.scan_budget` bucket of the worst shard's count — shard_map
+    needs one program, so the budget is the max, not per-shard).
+
+    Returns ``(local_idx (S, G) int32, pad_mask (S, G) bool, G)``; padding
+    entries point at local slot 0 and are masked False in the compacted
+    per-query gates, the same duplicate-then-mask discipline as
+    `plan.compact_gate`.
+    """
+    from repro.core.plan import scan_budget
+
+    m = union_gate.shape[0]
+    if m % n_shards:
+        raise ValueError(
+            f"shard count {n_shards} must divide flat length {m}"
+        )
+    local_len = m // n_shards
+    per_shard = union_gate.reshape(n_shards, local_len)
+    budget = scan_budget(int(per_shard.sum(axis=1).max()), local_len)
+    local_idx = np.zeros((n_shards, budget), np.int32)
+    pad_mask = np.zeros((n_shards, budget), bool)
+    for s in range(n_shards):
+        nz = np.nonzero(per_shard[s])[0][:budget]
+        local_idx[s, : len(nz)] = nz
+        pad_mask[s, : len(nz)] = True
+    return local_idx, pad_mask, budget
+
+
 # ------------------------------------------------------------- shard_map ---
 
 

@@ -111,6 +111,13 @@ def test_scan_matches_seed_loop(survey, method):
     np.testing.assert_array_equal(got.depth, ref_depth)
     assert got.stats.files_contributing == ref_contrib
     assert got.stats.files_considered == ref_considered
+    # Sparse execution (the default) must never scan more than the layout
+    # holds, and its budget accounting must be self-consistent.
+    exec_ds, _ = eng.exec_dataset(
+        "per_file" if method.startswith("raw_fits")
+        else ("unstructured" if "unstructured" in method else "structured"))
+    assert got.stats.packs_scanned == got.stats.scan_budget <= exec_ds.n_packs
+    assert got.stats.packs_gated <= got.stats.packs_scanned
 
 
 @pytest.mark.parametrize("method", ["sql_structured", "unstructured_seq",
