@@ -1,0 +1,140 @@
+"""CI perf gate over BENCH_coadd.json (ROADMAP bench-tracking item).
+
+Compares the current --quick run against the base branch's BENCH_coadd
+artifact and fails when any us/image row (per-method or batched) regresses
+by more than ``--threshold`` (default 1.5x — wide enough for shared-runner
+CPU jitter, tight enough to catch real dispatch/scan regressions).  Also
+appends one trajectory row per run to ``BENCH_trajectory.jsonl`` so the
+us/image history across PRs is a downloadable artifact rather than
+archaeology over old CI logs.
+
+With no baseline (first run on a branch, expired artifacts) the current
+report is its own baseline: the gate degrades to a self-consistency pass
+and says so, rather than failing closed on missing history.
+
+  python -m benchmarks.perf_gate --current BENCH_coadd.json \
+      [--baseline path.json] [--history old_trajectory.jsonl] \
+      [--trajectory BENCH_trajectory.jsonl] [--threshold 1.5] \
+      [--sha abc123] [--ref refs/pull/7]
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def _us_per_image_rows(report: Dict) -> Dict[str, float]:
+    """Every --quick us/image row, namespaced: methods/<m>, batched/b<K>."""
+    rows: Dict[str, float] = {}
+    for m, rec in report.get("methods", {}).items():
+        if rec.get("us_per_image"):
+            rows[f"methods/{m}"] = float(rec["us_per_image"])
+    for bs, rec in report.get("batched", {}).items():
+        if rec.get("us_per_image"):
+            rows[f"batched/b{bs}"] = float(rec["us_per_image"])
+    return rows
+
+
+def gate(current: Dict, baseline: Dict, threshold: float) -> Tuple[List[str], List[str]]:
+    """(regressions, summary_lines) for current vs baseline us/image rows."""
+    cur = _us_per_image_rows(current)
+    base = _us_per_image_rows(baseline)
+    regressions: List[str] = []
+    lines: List[str] = []
+    for name in sorted(cur):
+        if name not in base or base[name] <= 0:
+            lines.append(f"  {name}: {cur[name]:.1f} us/img (new row)")
+            continue
+        ratio = cur[name] / base[name]
+        mark = ""
+        if ratio > threshold:
+            mark = f"  << REGRESSION (>{threshold:.2f}x)"
+            regressions.append(
+                f"{name}: {base[name]:.1f} -> {cur[name]:.1f} us/img "
+                f"({ratio:.2f}x)"
+            )
+        lines.append(
+            f"  {name}: {base[name]:.1f} -> {cur[name]:.1f} us/img "
+            f"({ratio:.2f}x){mark}"
+        )
+    return regressions, lines
+
+
+def trajectory_row(current: Dict, sha: str, ref: str) -> Dict:
+    """One compact history row: us/image per row + the streaming headline."""
+    row = {
+        "utc": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+        "sha": sha,
+        "ref": ref,
+        "us_per_image": _us_per_image_rows(current),
+    }
+    streaming = current.get("streaming")
+    if streaming:
+        row["streaming"] = {
+            k: streaming[k]
+            for k in ("t_first_eager_s", "t_first_stream_s",
+                      "first_coadd_speedup", "bytes_uploaded_first",
+                      "archive_bytes", "oversubscription")
+            if k in streaming
+        }
+    return row
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_coadd.json")
+    ap.add_argument("--baseline", default=None,
+                    help="base-branch BENCH_coadd.json; missing/absent path "
+                         "=> self-baseline (gate passes trivially)")
+    ap.add_argument("--threshold", type=float, default=1.5)
+    ap.add_argument("--history", default=None,
+                    help="base-branch BENCH_trajectory.jsonl to extend")
+    ap.add_argument("--trajectory", default="BENCH_trajectory.jsonl")
+    ap.add_argument("--sha", default=os.environ.get("GITHUB_SHA", "local"))
+    ap.add_argument("--ref", default=os.environ.get("GITHUB_REF", "local"))
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    self_baselined = not (args.baseline and os.path.exists(args.baseline))
+    if self_baselined:
+        print("perf-gate: no baseline artifact; current run is its own "
+              "baseline (first run on this branch?)")
+        baseline = current
+    else:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+
+    regressions, lines = gate(current, baseline, args.threshold)
+    print(f"perf-gate: threshold {args.threshold:.2f}x, "
+          f"{len(lines)} us/image rows compared:")
+    print("\n".join(lines))
+
+    # Extend the trajectory: base history (if any) + this run's row.
+    if args.history and os.path.exists(args.history) \
+            and os.path.abspath(args.history) != os.path.abspath(args.trajectory):
+        shutil.copyfile(args.history, args.trajectory)
+    with open(args.trajectory, "a") as f:
+        f.write(json.dumps(trajectory_row(current, args.sha, args.ref)) + "\n")
+    n_rows = sum(1 for _ in open(args.trajectory))
+    print(f"perf-gate: trajectory {args.trajectory} now has {n_rows} row(s)")
+
+    if regressions:
+        print("perf-gate: FAIL —", len(regressions), "regression(s):")
+        for r in regressions:
+            print(" ", r)
+        return 1
+    print("perf-gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

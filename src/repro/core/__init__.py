@@ -9,11 +9,14 @@ from repro.core.engine import METHODS, CoaddEngine, CoaddResult, JobStats
 from repro.core.jobtracker import FailureInjector, JobTracker, MapTask
 from repro.core.plan import (
     CoaddPlan,
+    ScanWindow,
     SparseScanIndex,
     scan_budget,
     sparse_pack_index,
     stack_plans,
+    window_schedule,
 )
+from repro.core.seqfile import ResidencyManager
 from repro.core.prefilter import SpatialIndex
 from repro.core.query import BANDS, CoaddQuery
 from repro.core.survey import Survey, SurveyConfig, make_survey
@@ -29,6 +32,8 @@ __all__ = [
     "JobTracker",
     "MapTask",
     "METHODS",
+    "ResidencyManager",
+    "ScanWindow",
     "SparseScanIndex",
     "SpatialIndex",
     "Survey",
@@ -37,4 +42,5 @@ __all__ = [
     "scan_budget",
     "sparse_pack_index",
     "stack_plans",
+    "window_schedule",
 ]

@@ -65,12 +65,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import mapper, psf, reducer
 from repro.core.plan import (
     CoaddPlan,
+    ScanWindow,
     SparseScanIndex,
     compact_gate,
     compact_gates,
+    compact_window_gate,
+    compact_window_gates,
     sparse_pack_index,
     stack_plans,
     union_sparse_index,
+    window_schedule,
 )
 from repro.core.prefilter import (
     SpatialIndex,
@@ -83,6 +87,7 @@ from repro.core.seqfile import (
     DevicePackedDataset,
     MeshResidentDataset,
     PackedDataset,
+    ResidencyManager,
     SlotRemap,
     pack_per_file,
     pack_structured,
@@ -133,6 +138,14 @@ class JobStats:
                                    #   per-shard budget in run_distributed);
                                    #   descriptive, not additive — every
                                    #   result in a job reports it
+    # Streaming-residency accounting (DESIGN.md §6).  Zero on the eager
+    # path (no device budget configured); attribution follows the same
+    # rules as above — windows is descriptive, chunk counters are additive
+    # (batched/distributed jobs put them on the first result).
+    windows: int = 0               # residency windows the query scanned
+    chunk_uploads: int = 0         # chunks uploaded during this call (misses)
+    residency_hits: int = 0        # chunks served already-resident
+    residency_evictions: int = 0   # LRU evictions this call forced
 
 
 @dataclasses.dataclass
@@ -340,6 +353,18 @@ def _coadd_scan_batch_sparse(
     return jax.vmap(one)(gates, qvecs, grids_ra, grids_dec)
 
 
+def _sync(x):
+    """The streaming executors' ONE host sync, at reduce time (DESIGN.md §6).
+
+    Every window dispatch and every chunk upload before this point is
+    asynchronous — the device scans window N while the host enqueues the
+    N+1 upload — so a streaming query's wall clock is max(upload, compute)
+    per window, not their sum.  Tests monkeypatch this to pin the
+    block-only-at-reduce-time contract.
+    """
+    return jax.block_until_ready(x)
+
+
 class CoaddEngine:
     """Plans queries on the host, executes them against resident layouts.
 
@@ -361,6 +386,8 @@ class CoaddEngine:
         kernel_interpret: bool = True,
         match_psf_sigma: Optional[float] = None,
         sparse: bool = True,
+        device_budget_bytes: Optional[int] = None,
+        stream_chunk_packs: Optional[int] = None,
     ):
         self.survey = survey
         self.use_kernel = use_kernel
@@ -372,6 +399,14 @@ class CoaddEngine:
         # time.  False reproduces the dense masked-discard scan over every
         # pack — kept as the parity/benchmark baseline.
         self.sparse = sparse
+        # Streaming residency (DESIGN.md §6): with a device budget set,
+        # layouts stop uploading eagerly; queries scan budget-sized chunk
+        # windows with uploads double-buffered behind compute, and the
+        # ResidencyManager LRU-evicts cold chunks — archives larger than
+        # device memory run correctly, just with more windows.
+        self.device_budget_bytes = device_budget_bytes
+        self.stream_chunk_packs = stream_chunk_packs  # None -> budget/2 sizing
+        self.residency = ResidencyManager(device_budget_bytes)
         self.camcol_dec = camcol_dec_table(survey)
         self.sql = SpatialIndex.build(survey)
         self._datasets: Dict[str, PackedDataset] = {}
@@ -467,6 +502,42 @@ class CoaddEngine:
             self._psf_device[layout] = jnp.asarray(bank)
         return self._psf_device[layout]
 
+    # ----- streaming residency (DESIGN.md §6) -----
+    def _bank_pack_nbytes(self, layout: str) -> int:
+        """Resident bytes ONE pack's PSF matching-kernel bank adds (0 when
+        matching is off) — charged alongside pixel bytes so the budget
+        bounds everything a chunk keeps on device."""
+        bank = self.psf_kernel_bank(layout)
+        return 0 if bank is None else bank[0].nbytes
+
+    def _chunk_packs(self, exec_ds: PackedDataset) -> int:
+        """Packs per residency chunk: half the budget, so two chunks —
+        the one being scanned and the one uploading behind it — fit
+        resident simultaneously (double buffering)."""
+        if self.stream_chunk_packs is not None:
+            return max(1, min(self.stream_chunk_packs, exec_ds.n_packs))
+        pack_bytes = max(
+            exec_ds.pack_nbytes() + self._bank_pack_nbytes(exec_ds.layout), 1
+        )
+        fit = int(self.device_budget_bytes // (2 * pack_bytes))
+        return max(1, min(fit, exec_ds.n_packs))
+
+    def _resident_chunk(self, layout: str, exec_ds: PackedDataset,
+                        start: int, stop: int):
+        """(DevicePackedDataset, psf chunk) for packs [start, stop), via LRU."""
+        key = (layout, start, stop)
+
+        def build():
+            dev = exec_ds.to_device_chunk(start, stop)
+            bank = self.psf_kernel_bank(layout)
+            kern = None if bank is None else jax.device_put(bank[start:stop])
+            self.pack_upload_count += 1
+            return (dev, kern)
+
+        nbytes = (exec_ds.chunk_nbytes(start, stop)
+                  + (stop - start) * self._bank_pack_nbytes(layout))
+        return self.residency.acquire(key, nbytes, build)
+
     # ----- shared helpers -----
     def _grids(self, query: CoaddQuery):
         gr, gd = mapper.query_grid_sky(query)
@@ -561,6 +632,107 @@ class CoaddEngine:
         )
         return sp if sp.worthwhile else None
 
+    def _stream_windows(self, exec_ds: PackedDataset,
+                        gate_any: np.ndarray) -> List[ScanWindow]:
+        """Chunk-aligned window schedule for a (P,)-any gate (or all packs
+        when sparse execution is off — dense semantics scan everything)."""
+        if self.sparse:
+            gated = np.nonzero(gate_any)[0]
+        else:
+            gated = np.arange(exec_ds.n_packs)
+        return window_schedule(gated, exec_ds.n_packs,
+                               self._chunk_packs(exec_ds))
+
+    def _run_stream_windows(self, layout: str, exec_ds: PackedDataset,
+                            windows: List[ScanWindow], dispatch):
+        """Walk a window schedule: dispatch each window against its
+        resident chunk, prefetch the next chunk (its async `device_put`
+        rides behind the in-flight scan — the double buffer), accumulate
+        the additive window partials on device, and host-sync ONCE at
+        reduce time.  ``dispatch(dev, kern, win)`` returns the partial
+        tuple; returns (partials, (uploads, hits, evictions), elapsed_s).
+        """
+        up0, hit0, ev0 = (self.residency.uploads, self.residency.hits,
+                          self.residency.evictions)
+        t1 = time.perf_counter()
+        cur = self._resident_chunk(layout, exec_ds,
+                                   windows[0].start, windows[0].stop)
+        acc = None
+        for i, win in enumerate(windows):
+            dev, kern = cur
+            self.dispatch_count += 1
+            out = dispatch(dev, kern, win)
+            acc = out if acc is None else tuple(
+                a + b for a, b in zip(acc, out)
+            )
+            if i + 1 < len(windows):
+                nxt = windows[i + 1]
+                cur = self._resident_chunk(layout, exec_ds,
+                                           nxt.start, nxt.stop)
+        _sync(acc[0])
+        elapsed = time.perf_counter() - t1
+        counters = (self.residency.uploads - up0,
+                    self.residency.hits - hit0,
+                    self.residency.evictions - ev0)
+        return acc, counters, elapsed
+
+    def _execute_streaming(self, plan: CoaddPlan) -> CoaddResult:
+        """Windowed query under a device budget (DESIGN.md §6).
+
+        The gated pack set is partitioned into residency-chunk windows;
+        each window runs the §5 sparse program against its chunk while the
+        next chunk's upload rides behind it (async `device_put`), and the
+        window partials — the reduce monoid — accumulate on device.  The
+        one host sync is `_sync` at the end: time-to-first-coadd no longer
+        waits for the whole archive to land.
+        """
+        ds = self.dataset(plan.layout)
+        exec_ds, _ = self.exec_dataset(plan.layout)
+        gate = self._exec_gate(plan)
+        grid_ra, grid_dec = self._grids(plan.query)
+        block_rows = self._block_rows(plan.query, ds)
+        windows = self._stream_windows(exec_ds, gate.any(axis=1))
+        qvec = jnp.asarray(plan.qvec)
+
+        def dispatch(dev, kern, win):
+            return _coadd_scan_sparse(
+                dev.pixels,
+                dev.wcs,
+                dev.ints,
+                dev.floats,
+                kern,
+                jnp.asarray(win.pack_idx),
+                jnp.asarray(compact_window_gate(gate, win)),
+                qvec,
+                grid_ra,
+                grid_dec,
+                use_kernel=self.use_kernel,
+                block_rows=block_rows,
+                interpret=self.kernel_interpret,
+            )
+
+        (coadd, depth, contrib, considered), counters, elapsed = \
+            self._run_stream_windows(plan.layout, exec_ds, windows, dispatch)
+        uploads, hits, evictions = counters
+        stats = JobStats(
+            method=plan.method,
+            files_considered=int(considered),
+            files_contributing=int(contrib),
+            packs_touched=plan.packs_touched,
+            t_locate_s=plan.t_locate_s,
+            t_map_reduce_s=elapsed,
+            t_total_s=plan.t_locate_s + elapsed,
+            dispatches=len(windows),
+            packs_gated=int(gate.any(axis=1).sum()),
+            packs_scanned=sum(w.budget for w in windows),
+            scan_budget=max(w.budget for w in windows),
+            windows=len(windows),
+            chunk_uploads=uploads,
+            residency_hits=hits,
+            residency_evictions=evictions,
+        )
+        return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
+
     # ----- execution: one dispatch against resident data -----
     def execute(self, plan: CoaddPlan) -> CoaddResult:
         """One-dispatch query: device-resident packs + (P, cap) slot gate.
@@ -569,7 +741,11 @@ class CoaddEngine:
         derived host-side and the jitted program gathers just those packs
         before scanning (`_coadd_scan_sparse`) — map work scales with
         `packs_gated` instead of the layout size, still in one dispatch.
+        Under a device budget the query streams instead
+        (`_execute_streaming`): windowed scans over budget-sized chunks.
         """
+        if self.device_budget_bytes is not None:
+            return self._execute_streaming(plan)
         ds = self.dataset(plan.layout)
         exec_ds, _ = self.exec_dataset(plan.layout)
         dev = self.device_dataset(plan.layout)
@@ -656,11 +832,15 @@ class CoaddEngine:
         exec_ds, remap = self.exec_dataset(layout)
         if remap is not None:
             gates = np.stack([remap.apply(g) for g in gates])
-        dev = self.device_dataset(layout)
         grids = [self._grids(p.query) for p in plans]
         grids_ra = jnp.stack([g[0] for g in grids])
         grids_dec = jnp.stack([g[1] for g in grids])
         block_rows = self._block_rows(plans[0].query, ds)
+        if self.device_budget_bytes is not None:
+            return self._execute_batch_streaming(
+                plans, exec_ds, gates, qvecs, grids_ra, grids_dec, block_rows
+            )
+        dev = self.device_dataset(layout)
         psf_kernels = self._device_psf_kernels(layout)
         sp = self._sparse_index(gates)
         t1 = time.perf_counter()
@@ -719,6 +899,69 @@ class CoaddEngine:
                 packs_gated=int(gates[i].any(axis=1).sum()),
                 packs_scanned=scanned if i == 0 else 0,
                 scan_budget=scanned,
+            )
+            results.append(
+                CoaddResult(np.asarray(coadds[i]), np.asarray(depths[i]), stats)
+            )
+        return results
+
+    def _execute_batch_streaming(
+        self, plans, exec_ds, gates, qvecs, grids_ra, grids_dec, block_rows
+    ) -> List[CoaddResult]:
+        """Windowed batch under a device budget (DESIGN.md §6).
+
+        Windows come from the *union* of the K gates (one gathered chunk
+        serves the whole batch, as in §5's union compaction); each window
+        is one vmapped dispatch, partials accumulate per query, and the
+        host syncs once at the end.
+        """
+        layout = plans[0].layout
+        union_any = gates.any(axis=0).any(axis=1)
+        windows = self._stream_windows(exec_ds, union_any)
+        qvecs_j = jnp.asarray(qvecs)
+
+        def dispatch(dev, kern, win):
+            return _coadd_scan_batch_sparse(
+                dev.pixels,
+                dev.wcs,
+                dev.ints,
+                dev.floats,
+                kern,
+                jnp.asarray(win.pack_idx),
+                jnp.asarray(compact_window_gates(gates, win)),
+                qvecs_j,
+                grids_ra,
+                grids_dec,
+                use_kernel=self.use_kernel,
+                block_rows=block_rows,
+                interpret=self.kernel_interpret,
+            )
+
+        (coadds, depths, contribs, considered), counters, elapsed = \
+            self._run_stream_windows(layout, exec_ds, windows, dispatch)
+        uploads, hits, evictions = counters
+        contribs = np.asarray(contribs)
+        considered = np.asarray(considered)
+        scanned = sum(w.budget for w in windows)
+        results = []
+        for i, p in enumerate(plans):
+            t_mr = elapsed if i == 0 else 0.0
+            stats = JobStats(
+                method=p.method,
+                files_considered=int(considered[i]),
+                files_contributing=int(contribs[i]),
+                packs_touched=p.packs_touched,
+                t_locate_s=p.t_locate_s,
+                t_map_reduce_s=t_mr,
+                t_total_s=p.t_locate_s + t_mr,
+                dispatches=len(windows) if i == 0 else 0,
+                packs_gated=int(gates[i].any(axis=1).sum()),
+                packs_scanned=scanned if i == 0 else 0,
+                scan_budget=max(w.budget for w in windows),
+                windows=len(windows),
+                chunk_uploads=uploads if i == 0 else 0,
+                residency_hits=hits if i == 0 else 0,
+                residency_evictions=evictions if i == 0 else 0,
             )
             results.append(
                 CoaddResult(np.asarray(coadds[i]), np.asarray(depths[i]), stats)
@@ -789,151 +1032,277 @@ class CoaddEngine:
                 for _ in queries
             ]
 
-        # The one-time layout shard (a pixel upload, not job init) stays
-        # outside the locate window so first-job and repeat-job stats are
-        # comparable — mirroring how execute() leaves device_dataset untimed.
-        mds = self.mesh_dataset("structured", mesh, shard_axes)
         n_shards = shard_count(mesh, shard_axes)
-        local_len = mds.n_flat // n_shards
+        exec_ds, _ = self.exec_dataset("structured")
+        pad_to = exec_ds.flat_len(n_shards)
         t0 = time.perf_counter()
         # Per-job host->mesh traffic: gates + qvecs + grids. No pixels.
         gates = np.stack(
-            [ds.flat_slot_mask(ids, pad_to=mds.n_flat) for ids in id_sets]
+            [ds.flat_slot_mask(ids, pad_to=pad_to) for ids in id_sets]
         )
-        # Per-shard local compaction (DESIGN.md §5): each shard gathers only
-        # the slab entries some query in the job selected, padded to one
-        # shared static budget — tiny queries on big meshes stop mapping
-        # every resident image.  The shipped per-query gates are compacted
-        # to the same local coordinates; padding is masked False.
-        local_idx = pad_mask = None
-        scan_budget_local = local_len
-        if self.sparse:
-            local_idx, pad_mask, budget = shard_local_compaction(
-                gates.any(axis=0), n_shards
-            )
-            if budget < local_len:
-                scan_budget_local = budget
-                per_shard = gates.reshape(len(queries), n_shards, local_len)
-                gates_exec = (
-                    np.take_along_axis(per_shard, local_idx[None], axis=2)
-                    & pad_mask[None]
-                ).reshape(len(queries), n_shards * budget)
-            else:
-                local_idx = None
-        if local_idx is None:
-            gates_exec = gates
         t_locate += time.perf_counter() - t0
         block_rows = self._block_rows(queries[0], ds)
-
         grids = np.stack([np.stack(mapper.query_grid_sky(q)) for q in queries])
         qvecs = np.stack([_query_vec(q) for q in queries])  # (nq, 7)
+        nq = len(queries)
 
-        in_spec = P(shard_axes)
-        meta_keys_i = tuple(sorted(mds.ints.keys()))
-        meta_keys_f = tuple(sorted(mds.floats.keys()))
+        # Flat-axis residency windows (DESIGN.md §6).  With no budget the
+        # whole archive shards once ([0, M) via the mesh_dataset cache, a
+        # pixel upload outside the locate window so first-job and repeat-job
+        # stats stay comparable).  Under a per-device budget the flat axis
+        # streams in shard-aligned windows sized so two per-shard slabs —
+        # scanning and uploading — fit the budget (double buffering).
+        img_bytes = max(
+            (exec_ds.pack_nbytes() + self._bank_pack_nbytes("structured"))
+            // max(exec_ds.capacity, 1),
+            1,
+        )
+        if self.device_budget_bytes is None:
+            flat_windows = [(0, pad_to)]
+        else:
+            per_shard = max(1, int(self.device_budget_bytes // (2 * img_bytes)))
+            win_flat = min(pad_to, per_shard * n_shards)
+            flat_windows = [
+                (a, min(a + win_flat, pad_to))
+                for a in range(0, pad_to, win_flat)
+            ]
+            if self.sparse:
+                union = gates.any(axis=0)
+                flat_windows = [
+                    (a, b) for a, b in flat_windows if union[a:b].any()
+                ] or flat_windows[:1]
+
+        meta_keys_i = tuple(sorted(exec_ds.ints.keys()))
+        meta_keys_f = tuple(sorted(exec_ds.floats.keys()))
         use_kernel = self.use_kernel
         interpret = self.kernel_interpret
-        # Optional operands ride as (possibly empty) tuples so the shard_map
-        # in_specs tree matches with or without PSF matching enabled.
-        kern_t = () if mds.psf_kernels is None else (mds.psf_kernels,)
-        # Likewise for the sparse local gather indices: shard s receives its
-        # (budget,) row of local slab indices, sharded exactly like the data.
-        idx_t = (
-            () if local_idx is None
-            else (jnp.asarray(local_idx.reshape(-1)),)
-        )
-
-        def job(px, wv, ints_flat, floats_flat, kern_t, idx_t, gates, qvecs, grids):
-            ints = dict(zip(meta_keys_i, ints_flat))
-            floats = dict(zip(meta_keys_f, floats_flat))
-            kern = kern_t[0] if kern_t else None
-            if idx_t:
-                # Local compaction: map only the slab entries the job gated.
-                idx = idx_t[0]
-                px = jnp.take(px, idx, axis=0)
-                wv = jnp.take(wv, idx, axis=0)
-                ints = {k: jnp.take(v, idx, axis=0) for k, v in ints.items()}
-                floats = {k: jnp.take(v, idx, axis=0) for k, v in floats.items()}
-                kern = None if kern is None else jnp.take(kern, idx, axis=0)
-
-            def one_query(gate, qvec, grid):
-                accept = _accept_from_meta(ints, floats, qvec) & gate
-                tiles, covs = mapper.map_batch(
-                    px,
-                    wv,
-                    accept,
-                    grid[0],
-                    grid[1],
-                    use_kernel=use_kernel,
-                    block_rows=block_rows,
-                    interpret=interpret,
-                    psf_kernels=kern,
-                )
-                c, d = reducer.reduce_local(tiles, covs)
-                return reducer.reduce_collective(
-                    c, d, axis_name=data_axes, scatter_axis_name=model_axis
-                )
-            return jax.vmap(one_query)(gates, qvecs, grids)
-
+        in_spec = P(shard_axes)
         out_rows = P(None, model_axis) if model_axis else P(None)
-        # vmap-of-psum under the VMA/rep checker is broken across jax
-        # versions (psum_invariant rejects axis_index_groups); check=False.
-        shard = shard_map_compat(
-            job,
-            mesh=mesh,
-            in_specs=(
-                in_spec,
-                in_spec,
-                (in_spec,) * len(meta_keys_i),
-                (in_spec,) * len(meta_keys_f),
-                (in_spec,) * len(kern_t),
-                (in_spec,) * len(idx_t),
-                P(None, shard_axes),
-                P(None),
-                P(None),
-            ),
-            out_specs=(out_rows, out_rows),
-            check=False,
-        )
+
+        def window_job(mds, gates_exec, local_idx, budgets, tile, local_len):
+            """One shard_map dispatch over one resident flat window."""
+            idx_t = (
+                () if local_idx is None
+                else (jnp.asarray(local_idx.reshape(-1)),)
+            )
+            bud_t = () if local_idx is None else (jnp.asarray(budgets),)
+            kern_t = () if mds.psf_kernels is None else (mds.psf_kernels,)
+
+            def job(px, wv, ints_flat, floats_flat, kern_t, idx_t, bud_t,
+                    gates, qvecs, grids):
+                ints = dict(zip(meta_keys_i, ints_flat))
+                floats = dict(zip(meta_keys_f, floats_flat))
+                kern = kern_t[0] if kern_t else None
+                npix_q = grids.shape[-1]
+
+                def collect(c, d):
+                    return reducer.reduce_collective(
+                        c, d, axis_name=data_axes, scatter_axis_name=model_axis
+                    )
+
+                if not idx_t:
+                    # Dense fallback: map the whole resident slab.
+                    def one_query(gate, qvec, grid):
+                        accept = _accept_from_meta(ints, floats, qvec) & gate
+                        tiles, covs = mapper.map_batch(
+                            px, wv, accept, grid[0], grid[1],
+                            use_kernel=use_kernel, block_rows=block_rows,
+                            interpret=interpret, psf_kernels=kern,
+                        )
+                        return collect(*reducer.reduce_local(tiles, covs))
+
+                    return jax.vmap(one_query)(gates, qvecs, grids)
+
+                # Local compaction with per-shard budgets (DESIGN.md §5/§6):
+                # the gather+map runs in `tile`-sized steps and each shard's
+                # fori_loop stops at its OWN bucketed budget — a quiet shard
+                # gathers and maps only its own gated entries, not the
+                # busiest shard's worth.  The psum/scatter collectives sit
+                # after the loop, so divergent trip counts never desync the
+                # collective schedule.
+                idx = idx_t[0]            # (shared_budget,) local indices
+                my_budget = bud_t[0][0]   # () this shard's own bucket
+
+                def tile_step(t, acc):
+                    c_acc, d_acc = acc
+                    sl = jax.lax.dynamic_slice(idx, (t * tile,), (tile,))
+                    px_t = jnp.take(px, sl, axis=0)
+                    wv_t = jnp.take(wv, sl, axis=0)
+                    ints_t = {k: jnp.take(v, sl, axis=0)
+                              for k, v in ints.items()}
+                    floats_t = {k: jnp.take(v, sl, axis=0)
+                                for k, v in floats.items()}
+                    kern_tile = (
+                        None if kern is None else jnp.take(kern, sl, axis=0)
+                    )
+                    gates_t = jax.lax.dynamic_slice(
+                        gates, (0, t * tile), (nq, tile)
+                    )
+
+                    def one_query(gate, qvec, grid):
+                        accept = _accept_from_meta(ints_t, floats_t, qvec) & gate
+                        tiles, covs = mapper.map_batch(
+                            px_t, wv_t, accept, grid[0], grid[1],
+                            use_kernel=use_kernel, block_rows=block_rows,
+                            interpret=interpret, psf_kernels=kern_tile,
+                        )
+                        return reducer.reduce_local(tiles, covs)
+
+                    c, d = jax.vmap(one_query)(gates_t, qvecs, grids)
+                    return (c_acc + c, d_acc + d)
+
+                init = (
+                    jnp.zeros((nq, npix_q, npix_q), jnp.float32),
+                    jnp.zeros((nq, npix_q, npix_q), jnp.float32),
+                )
+                n_tiles = (my_budget + tile - 1) // tile
+                c, d = jax.lax.fori_loop(0, n_tiles, tile_step, init)
+                return jax.vmap(collect)(c, d)
+
+            # vmap-of-psum under the VMA/rep checker is broken across jax
+            # versions (psum_invariant rejects axis_index_groups); check=False.
+            shard = shard_map_compat(
+                job,
+                mesh=mesh,
+                in_specs=(
+                    in_spec,
+                    in_spec,
+                    (in_spec,) * len(meta_keys_i),
+                    (in_spec,) * len(meta_keys_f),
+                    (in_spec,) * len(kern_t),
+                    (in_spec,) * len(idx_t),
+                    (in_spec,) * len(bud_t),
+                    P(None, shard_axes),
+                    P(None),
+                    P(None),
+                ),
+                out_specs=(out_rows, out_rows),
+                check=False,
+            )
+            self.dispatch_count += 1
+            return shard(
+                mds.pixels,
+                mds.wcs,
+                tuple(mds.ints[k] for k in meta_keys_i),
+                tuple(mds.floats[k] for k in meta_keys_f),
+                kern_t,
+                idx_t,
+                bud_t,
+                jnp.asarray(gates_exec),
+                jnp.asarray(qvecs),
+                jnp.asarray(grids),
+            )
+
+        def mesh_window(a: int, b: int) -> MeshResidentDataset:
+            if self.device_budget_bytes is None:
+                return self.mesh_dataset("structured", mesh, shard_axes)
+            key = ("mesh", "structured", mesh, tuple(shard_axes), a, b)
+
+            def build():
+                self.mesh_upload_count += 1
+                return exec_ds.to_mesh_window(
+                    mesh, tuple(shard_axes), a, b,
+                    psf_kernels=self.psf_kernel_bank("structured"),
+                )
+
+            # Budget accounting is per device: each shard holds 1/n_shards
+            # of the window.
+            return self.residency.acquire(
+                key, (b - a) // n_shards * img_bytes, build
+            )
+
+        up0, hit0, ev0 = (self.residency.uploads, self.residency.hits,
+                          self.residency.evictions)
+        # Eager path: the one-time whole-layout shard (a pixel upload, not
+        # job init) stays outside the timed window so first-job and
+        # repeat-job stats are comparable — mirroring how execute() leaves
+        # device_dataset untimed.  Streaming windows upload *inside* it:
+        # the overlapped transfer is exactly what time-to-first-coadd
+        # measures.
+        if self.device_budget_bytes is None:
+            mds = mesh_window(*flat_windows[0])
         t1 = time.perf_counter()
-        self.dispatch_count += 1
-        coadds, depths = shard(
-            mds.pixels,
-            mds.wcs,
-            tuple(mds.ints[k] for k in meta_keys_i),
-            tuple(mds.floats[k] for k in meta_keys_f),
-            kern_t,
-            idx_t,
-            jnp.asarray(gates_exec),
-            jnp.asarray(qvecs),
-            jnp.asarray(grids),
-        )
-        coadds.block_until_ready()
+        if self.device_budget_bytes is not None:
+            mds = mesh_window(*flat_windows[0])
+        coadds = depths = None
+        packs_scanned = 0
+        scan_budget_max = 0
+        shards_touched = np.zeros((nq,), np.int64)
+        for i, (a, b) in enumerate(flat_windows):
+            local_len = (b - a) // n_shards
+            gates_w = gates[:, a:b]
+            # Per-shard local compaction (DESIGN.md §5): each shard gathers
+            # only the slab entries some query in the job selected; shipped
+            # per-query gates are compacted to the same local coordinates,
+            # padding masked False.
+            local_idx = budgets = None
+            tile = local_len
+            budget_w = local_len
+            if self.sparse:
+                local_idx, pad_mask, budget, budgets = shard_local_compaction(
+                    gates_w.any(axis=0), n_shards
+                )
+                if budget < local_len:
+                    budget_w = budget
+                    # Tile size: a power-of-two divisor of the shared budget
+                    # (in this branch every per-shard bucket is a pure power
+                    # of two < local_len), floored at budget/8 so the tile
+                    # loop never degenerates into one-image steps.  Shards
+                    # run ceil(own_budget/tile) tiles; slack rows past a
+                    # shard's own budget are 0-padded, gate-False entries.
+                    tile = max(int(budgets.min()), budget // 8)
+                    per_shard = gates_w.reshape(nq, n_shards, local_len)
+                    gates_exec = (
+                        np.take_along_axis(per_shard, local_idx[None], axis=2)
+                        & pad_mask[None]
+                    ).reshape(nq, n_shards * budget)
+                else:
+                    local_idx = budgets = None
+            if local_idx is None:
+                gates_exec = gates_w
+            c, d = window_job(mds, gates_exec, local_idx, budgets, tile,
+                              local_len)
+            coadds = c if coadds is None else coadds + c
+            depths = d if depths is None else depths + d
+            packs_scanned += (
+                int(((budgets + tile - 1) // tile * tile).sum())
+                if budgets is not None else n_shards * local_len
+            )
+            scan_budget_max = max(scan_budget_max, budget_w)
+            # Locality stats derive from the *flat* gate the mesh actually
+            # executes: pack identity is lost in the flattened layout, so
+            # the honest "containers opened" count is resident (window,
+            # shard) slabs touched (see JobStats.packs_touched).
+            shards_touched += gates_w.reshape(nq, n_shards, local_len).any(
+                axis=2
+            ).sum(axis=1)
+            if i + 1 < len(flat_windows):
+                mds = mesh_window(*flat_windows[i + 1])  # prefetch next slab
+        _sync(coadds)
         t2 = time.perf_counter()
 
-        # Locality stats derive from the *flat* gate the mesh actually
-        # executes: pack identity is lost in the flattened layout, so the
-        # honest "containers opened" count is resident shard slabs touched
-        # (see JobStats.packs_touched).
-        shards_touched = [
-            int(g.reshape(n_shards, local_len).any(axis=1).sum()) for g in gates
-        ]
         results = []
         for qi, q in enumerate(queries):
             stats = JobStats(
                 method="distributed_sql_structured",
                 files_considered=len(all_ids),
                 files_contributing=len(id_sets[qi]),
-                packs_touched=shards_touched[qi],
+                packs_touched=int(shards_touched[qi]),
                 t_locate_s=t_locate,
                 t_map_reduce_s=t2 - t1,
                 t_total_s=t_locate + (t2 - t1),
-                # One shard_map dispatch serves the whole multi-query job;
-                # attribute it to the first result so summing stats is honest.
-                dispatches=1 if qi == 0 else 0,
-                packs_gated=shards_touched[qi],
-                packs_scanned=n_shards * scan_budget_local if qi == 0 else 0,
-                scan_budget=scan_budget_local,
+                # One windowed shard_map job serves the whole multi-query
+                # batch; attribute it to the first result so summing stats
+                # is honest.
+                dispatches=len(flat_windows) if qi == 0 else 0,
+                packs_gated=int(shards_touched[qi]),
+                packs_scanned=packs_scanned if qi == 0 else 0,
+                scan_budget=scan_budget_max,
+                windows=len(flat_windows),
+                chunk_uploads=(self.residency.uploads - up0) if qi == 0 else 0,
+                residency_hits=(self.residency.hits - hit0) if qi == 0 else 0,
+                residency_evictions=(self.residency.evictions - ev0)
+                if qi == 0 else 0,
             )
             results.append(
                 CoaddResult(np.asarray(coadds[qi]), np.asarray(depths[qi]), stats)

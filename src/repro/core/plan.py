@@ -115,6 +115,76 @@ def compact_gate(gate: np.ndarray, sp: SparseScanIndex) -> np.ndarray:
     return g
 
 
+@dataclasses.dataclass
+class ScanWindow:
+    """One streaming-residency window: a chunk of packs plus the scan over it.
+
+    The streaming executor (DESIGN.md §6) cannot assume the whole layout is
+    device-resident, so a query's gated pack set is partitioned by *chunk* —
+    the contiguous pack-range granule the `ResidencyManager` uploads and
+    evicts.  Each window scans one chunk with the same budget-bucketed
+    sparse program as §5, just with chunk-local indices; window results are
+    additive (the reduce monoid), so the executor streams chunk N+1's upload
+    behind chunk N's scan and blocks once at the end.
+    """
+
+    start: int             # chunk pack-range [start, stop) in layout coords
+    stop: int
+    sel: np.ndarray        # (n_gated,) *global* pack indices inside the chunk
+    pack_idx: np.ndarray   # (budget,) chunk-local indices, 0-padded
+    n_gated: int
+    budget: int            # static bucket == len(pack_idx)
+
+
+def window_schedule(
+    gated: np.ndarray, n_packs: int, chunk_packs: int
+) -> List[ScanWindow]:
+    """Partition a sorted gated-pack vector into chunk-aligned scan windows.
+
+    Chunks with no gated pack produce no window (their bytes never upload);
+    an empty gate still yields one single-pack window so the executor keeps
+    the §5 empty-gate contract: one dispatch, an all-False row, exact zeros.
+    """
+    if chunk_packs <= 0:
+        raise ValueError(f"chunk_packs must be positive, got {chunk_packs}")
+    if len(gated) == 0:
+        return [
+            ScanWindow(
+                0,
+                min(chunk_packs, n_packs),
+                np.empty((0,), np.int64),
+                np.zeros((1,), np.int32),
+                0,
+                1,
+            )
+        ]
+    windows: List[ScanWindow] = []
+    for c in range(0, n_packs, chunk_packs):
+        stop = min(c + chunk_packs, n_packs)
+        sel = gated[(gated >= c) & (gated < stop)]
+        if len(sel) == 0:
+            continue
+        budget = scan_budget(len(sel), stop - c)
+        idx = np.zeros((budget,), np.int32)
+        idx[: len(sel)] = sel - c
+        windows.append(ScanWindow(c, stop, sel, idx, len(sel), budget))
+    return windows
+
+
+def compact_window_gate(gate: np.ndarray, win: ScanWindow) -> np.ndarray:
+    """(P, cap) gate -> (budget, cap) gate over one window's gathered packs."""
+    out = np.zeros((win.budget, gate.shape[-1]), bool)
+    out[: win.n_gated] = gate[win.sel]
+    return out
+
+
+def compact_window_gates(gates: np.ndarray, win: ScanWindow) -> np.ndarray:
+    """(K, P, cap) gates -> (K, budget, cap) over one window's packs."""
+    out = np.zeros((gates.shape[0], win.budget, gates.shape[-1]), bool)
+    out[:, : win.n_gated] = gates[:, win.sel]
+    return out
+
+
 def union_sparse_index(gates: np.ndarray) -> SparseScanIndex:
     """Sparse index for a (K, P, cap) stack of gates: union over queries.
 
@@ -154,11 +224,15 @@ def stack_plans(plans: Sequence[CoaddPlan]) -> Tuple[np.ndarray, np.ndarray]:
 
 __all__: List[str] = [
     "CoaddPlan",
+    "ScanWindow",
     "SparseScanIndex",
     "compact_gate",
     "compact_gates",
+    "compact_window_gate",
+    "compact_window_gates",
     "scan_budget",
     "sparse_pack_index",
     "stack_plans",
     "union_sparse_index",
+    "window_schedule",
 ]

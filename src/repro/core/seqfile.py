@@ -23,7 +23,8 @@ index the paper's SQL method uses to build file splits (§4.1.4).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -90,6 +91,79 @@ class MeshResidentDataset:
 
 
 @dataclasses.dataclass
+class ResidentEntry:
+    """One LRU-tracked resident payload (a pack chunk or a mesh window)."""
+
+    key: Tuple
+    payload: Any
+    nbytes: int
+
+
+class ResidencyManager:
+    """Holds device-resident chunks under a byte budget with LRU eviction.
+
+    The streaming half of the residency contract (DESIGN.md §6): instead of
+    uploading a whole layout eagerly (`PackedDataset.to_device`), the engine
+    asks this manager for *chunks* — contiguous pack-ranges keyed by
+    ``(layout, start, stop)`` (mesh windows key themselves analogously with
+    the mesh in the key).  A hit refreshes recency and costs nothing; a miss
+    evicts least-recently-used entries until the new chunk fits, then calls
+    the supplied builder (whose `jax.device_put` is *asynchronous* — the
+    upload overlaps whatever the device is already scanning, which is what
+    double-buffers the windowed executors).
+
+    Eviction drops the LRU reference and lets the runtime free the buffers
+    once in-flight consumers finish — never an explicit ``delete()``, so a
+    chunk evicted while its scan is still enqueued stays valid for exactly
+    as long as that scan needs it.  ``budget_bytes=None`` disables eviction
+    (everything stays resident, the eager contract).
+    """
+
+    def __init__(self, budget_bytes: Optional[int] = None):
+        if budget_bytes is not None and budget_bytes <= 0:
+            raise ValueError(f"budget_bytes must be positive, got {budget_bytes}")
+        self.budget_bytes = budget_bytes
+        self._lru: "OrderedDict[Tuple, ResidentEntry]" = OrderedDict()
+        self.uploads = 0        # builder invocations (chunk misses)
+        self.hits = 0           # chunks served without an upload
+        self.evictions = 0      # entries dropped to make room
+        self.bytes_uploaded = 0 # cumulative H2D bytes across all misses
+
+    @property
+    def bytes_resident(self) -> int:
+        return sum(e.nbytes for e in self._lru.values())
+
+    @property
+    def n_resident(self) -> int:
+        return len(self._lru)
+
+    def acquire(self, key: Tuple, nbytes: int, build: Callable[[], Any]) -> Any:
+        """Return the resident payload for ``key``, uploading on miss."""
+        entry = self._lru.get(key)
+        if entry is not None:
+            self._lru.move_to_end(key)
+            self.hits += 1
+            return entry.payload
+        if self.budget_bytes is not None:
+            # Evict LRU-first until the newcomer fits.  A chunk larger than
+            # the whole budget still loads (the scan needs it); the budget
+            # is then transiently exceeded by that one chunk, never by two.
+            while self._lru and self.bytes_resident + nbytes > self.budget_bytes:
+                _, evicted = self._lru.popitem(last=False)
+                self.evictions += 1
+        payload = build()
+        self._lru[key] = ResidentEntry(key, payload, nbytes)
+        self.uploads += 1
+        self.bytes_uploaded += nbytes
+        return payload
+
+    def clear(self) -> None:
+        """Drop every resident entry (a reset, not budget pressure — the
+        ``evictions`` counter tracks only LRU evictions forced by misses)."""
+        self._lru.clear()
+
+
+@dataclasses.dataclass
 class SlotRemap:
     """Slot-index remap from a layout's (P, cap) grid onto a reblocked one.
 
@@ -150,8 +224,10 @@ class PackedDataset:
     def to_device(self) -> DevicePackedDataset:
         """Upload the whole layout to device, once (DESIGN.md §3).
 
-        This is the *only* place pack pixels cross host->device; everything
-        downstream indexes/masks the resident arrays on device.
+        The eager residency contract: with no device budget configured this
+        is the only place pack pixels cross host->device; everything
+        downstream indexes/masks the resident arrays on device.  Streaming
+        residency uploads `to_device_chunk` windows instead (§6).
         """
         import jax.numpy as jnp  # deferred: packing itself is jax-free
 
@@ -161,6 +237,39 @@ class PackedDataset:
             ints={k: jnp.asarray(v) for k, v in self.ints.items()},
             floats={k: jnp.asarray(v) for k, v in self.floats.items()},
         )
+
+    def to_device_chunk(self, start: int, stop: int) -> DevicePackedDataset:
+        """Upload the pack-range [start, stop) as its own resident chunk.
+
+        The `jax.device_put` calls are asynchronous: the host returns as
+        soon as the transfers are enqueued, so a chunk uploaded while the
+        device scans the previous one overlaps H2D with compute — the
+        double-buffering the streaming executor relies on (DESIGN.md §6).
+        """
+        import jax  # deferred: packing itself is jax-free
+
+        sl = slice(start, stop)
+        put = jax.device_put
+        return DevicePackedDataset(
+            pixels=put(self.pixels[sl]),
+            wcs=put(self.wcs[sl]),
+            ints={k: put(v[sl]) for k, v in self.ints.items()},
+            floats={k: put(v[sl]) for k, v in self.floats.items()},
+        )
+
+    def pack_nbytes(self) -> int:
+        """Host bytes of ONE pack (pixels + wcs + metadata columns)."""
+        per_pack = (
+            self.pixels[0].nbytes
+            + self.wcs[0].nbytes
+            + sum(v[0].nbytes for v in self.ints.values())
+            + sum(v[0].nbytes for v in self.floats.values())
+        )
+        return int(per_pack)
+
+    def chunk_nbytes(self, start: int, stop: int) -> int:
+        """Device bytes a resident [start, stop) chunk will occupy."""
+        return self.pack_nbytes() * max(stop - start, 0)
 
     def slot_mask(self, image_ids) -> np.ndarray:
         """(P, cap) bool gate selecting exactly `image_ids` (the SQL splits).
@@ -188,6 +297,11 @@ class PackedDataset:
             mask[p * self.capacity + s] = True
         return mask
 
+    def flat_len(self, n_shards: int) -> int:
+        """Padded image-major flat length M for an ``n_shards``-way split."""
+        m = self.n_packs * self.capacity
+        return int(np.ceil(m / n_shards) * n_shards)
+
     def to_mesh(
         self,
         mesh,
@@ -199,9 +313,31 @@ class PackedDataset:
         Flattens (P, cap) -> (M,) image-major, pads M up to the shard count
         with invalid slots (image_id -1, valid False — the same phantom-proof
         padding `_accept_from_meta` already rejects), and `device_put`s every
-        array with a `NamedSharding` over ``shard_axes``.  This is the only
-        place distributed pixels cross host->mesh; the engine caches the
-        result per (layout, mesh, shard_axes).
+        array with a `NamedSharding` over ``shard_axes``.  With no device
+        budget this is the only place distributed pixels cross host->mesh;
+        the engine caches the result per (layout, mesh, shard_axes).
+        """
+        from repro.distributed.sharding import shard_count
+
+        pad_to = self.flat_len(shard_count(mesh, shard_axes))
+        return self.to_mesh_window(mesh, shard_axes, 0, pad_to, psf_kernels)
+
+    def to_mesh_window(
+        self,
+        mesh,
+        shard_axes: Tuple[str, ...],
+        start: int,
+        stop: int,
+        psf_kernels: Optional[np.ndarray] = None,
+    ) -> MeshResidentDataset:
+        """Shard the flat-axis window [start, stop) onto `mesh` (DESIGN.md §6).
+
+        The streaming sibling of `to_mesh`: the window bounds index the
+        *padded* image-major flat axis (``flat_len``) and must be multiples
+        of the shard count so every device receives an equal slab of the
+        window.  Uploads are `jax.device_put` — asynchronous, so a window
+        shipped while the mesh maps the previous one overlaps H2D with
+        compute exactly like the single-host chunk path.
         """
         import jax  # deferred: packing itself is jax-free
 
@@ -209,14 +345,20 @@ class PackedDataset:
 
         m = self.n_packs * self.capacity
         n_shards = shard_count(mesh, shard_axes)
-        pad_to = int(np.ceil(m / n_shards) * n_shards)
+        if (stop - start) % n_shards or start % n_shards:
+            raise ValueError(
+                f"window [{start}, {stop}) must align to {n_shards} shards"
+            )
 
         def flat(a: np.ndarray, fill) -> np.ndarray:
             a = a.reshape((m,) + a.shape[2:])
-            if pad_to > m:
+            if stop > m:
                 a = np.concatenate(
-                    [a, np.full((pad_to - m,) + a.shape[1:], fill, a.dtype)]
+                    [a[start:m],
+                     np.full((stop - max(start, m),) + a.shape[1:], fill, a.dtype)]
                 )
+            else:
+                a = a[start:stop]
             return a
 
         sharding = image_axis_sharding(mesh, shard_axes)
@@ -228,7 +370,7 @@ class PackedDataset:
             floats={k: put(flat(v, 0)) for k, v in self.floats.items()},
             psf_kernels=None if psf_kernels is None
             else put(flat(psf_kernels, 0)),
-            n_flat=pad_to,
+            n_flat=stop - start,
         )
 
     def reblock(self, capacity: int) -> Tuple["PackedDataset", "SlotRemap"]:

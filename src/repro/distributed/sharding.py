@@ -50,21 +50,26 @@ def image_axis_sharding(mesh: Mesh, shard_axes: Tuple[str, ...]) -> NamedShardin
 
 def shard_local_compaction(
     union_gate: np.ndarray, n_shards: int
-) -> Tuple[np.ndarray, np.ndarray, int]:
+) -> Tuple[np.ndarray, np.ndarray, int, np.ndarray]:
     """Per-shard gather indices for a job's union flat gate (DESIGN.md §5).
 
     ``union_gate`` is the (M,) OR of every query's flat slot gate; a
     NamedSharding over axis 0 gives shard ``s`` the contiguous slab
     ``[s*L, (s+1)*L)`` with ``L = M // n_shards``.  Each shard should map
     only the slab entries some query selected, so this derives, per shard,
-    the *local* indices of its gated slots, padded to one shared static
-    budget (`plan.scan_budget` bucket of the worst shard's count — shard_map
-    needs one program, so the budget is the max, not per-shard).
+    the *local* indices of its gated slots.  The index array is padded to
+    one shared static shape (`plan.scan_budget` bucket of the worst shard's
+    count — shard_map compiles one program), but each shard also gets its
+    OWN bucketed budget: the executor picks one power-of-two tile size
+    dividing the shared budget and runs ``ceil(own_budget / tile)`` tiles
+    per shard (slack rows past a shard's budget are 0-padded, gate-False
+    entries), so quiet shards stop paying the busiest shard's gather+map
+    cost (the ROADMAP two-tier budget).
 
-    Returns ``(local_idx (S, G) int32, pad_mask (S, G) bool, G)``; padding
-    entries point at local slot 0 and are masked False in the compacted
-    per-query gates, the same duplicate-then-mask discipline as
-    `plan.compact_gate`.
+    Returns ``(local_idx (S, G) int32, pad_mask (S, G) bool, G,
+    budgets (S,) int32)`` with ``G == budgets.max()``; padding entries
+    point at local slot 0 and are masked False in the compacted per-query
+    gates, the same duplicate-then-mask discipline as `plan.compact_gate`.
     """
     from repro.core.plan import scan_budget
 
@@ -75,14 +80,18 @@ def shard_local_compaction(
         )
     local_len = m // n_shards
     per_shard = union_gate.reshape(n_shards, local_len)
-    budget = scan_budget(int(per_shard.sum(axis=1).max()), local_len)
+    counts = per_shard.sum(axis=1)
+    budgets = np.array(
+        [scan_budget(int(c), local_len) for c in counts], np.int32
+    )
+    budget = int(budgets.max())
     local_idx = np.zeros((n_shards, budget), np.int32)
     pad_mask = np.zeros((n_shards, budget), bool)
     for s in range(n_shards):
         nz = np.nonzero(per_shard[s])[0][:budget]
         local_idx[s, : len(nz)] = nz
         pad_mask[s, : len(nz)] = True
-    return local_idx, pad_mask, budget
+    return local_idx, pad_mask, budget, budgets
 
 
 # ------------------------------------------------------------- shard_map ---

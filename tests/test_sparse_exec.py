@@ -228,6 +228,28 @@ def test_sparse_no_reupload_across_queries(survey, monkeypatch):
 
 # ----- distributed per-shard compaction ------------------------------------
 
+def test_shard_local_compaction_per_shard_budgets():
+    """Skewed union gates get two-tier budgets: a shared static shape plus
+    each shard's own bucket, so quiet shards stop over-scanning."""
+    from repro.distributed.sharding import shard_local_compaction
+
+    union = np.zeros((32,), bool)
+    union[1] = True                   # shard 0: 1 gated -> bucket 1
+    union[8:15] = True                # shard 1: 7 gated -> bucket 8
+    union[16] = union[18] = True      # shard 2: 2 gated -> bucket 2
+    #                                   shard 3: 0 gated -> bucket 1
+    idx, mask, shared, budgets = shard_local_compaction(union, 4)
+    assert shared == 8 and list(budgets) == [1, 8, 2, 1]
+    assert idx.shape == mask.shape == (4, 8)
+    # Indices are slab-local; padding masked False points at local slot 0.
+    assert list(idx[0][:1]) == [1] and mask[0].sum() == 1
+    assert list(idx[1][:7]) == list(range(0, 7)) and mask[1].sum() == 7
+    assert list(idx[2][:2]) == [0, 2] and mask[2].sum() == 2
+    assert mask[3].sum() == 0
+    with pytest.raises(ValueError):
+        shard_local_compaction(union, 5)  # 5 does not divide 32
+
+
 def test_distributed_sparse_matches_dense(survey):
     """Per-shard local compaction reproduces the dense distributed answer,
     and the stats derive from the flat gate (shard slabs, not phantom
