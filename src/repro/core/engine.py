@@ -36,10 +36,18 @@ vector + locate stats — the paper's job-init phase) feeding one of three
                                reduce-scatter (see `reducer.py`).
 
 When ``match_psf_sigma`` is set, the map stage first convolves every image
-to that common PSF width using a host-precomputed per-slot kernel bank
-(`psf.matching_kernel_bank` over the layout's ``psf_sigma`` metadata) —
-threaded as a plain operand through both the XLA mapper and the Pallas
-``coadd_fused`` kernel.
+to that common PSF width using a host-precomputed per-slot kernel bank —
+measured-PSF homogenization kernels (`psf.homogenization_bank`, Fourier
+least squares over the survey's empirical stamps) when the layout carries
+stamps, the separable Gaussian bank (`psf.matching_kernel_bank` over
+``psf_sigma``) otherwise — threaded as a plain operand through the XLA
+mapper, the Pallas ``coadd_fused`` kernel (1-D banded or 2-D banded-matmul
+variants), and the distributed mesh job.  On the XLA path the matching
+convolution is query-independent, so by default it runs ONCE per
+(layout, target) at residency time and the *matched pixels* are cached
+under the device budget (`matched_pixel_cache`, DESIGN.md §7); the Pallas
+path keeps the documented in-kernel recompute instead (fusion trades MXU
+for HBM).
 
 Sparse execution (DESIGN.md §5, default on): the planner's gate also sets
 the *scan extent*.  Each executor gathers just the packs the gate opens out
@@ -146,6 +154,17 @@ class JobStats:
     chunk_uploads: int = 0         # chunks uploaded during this call (misses)
     residency_hits: int = 0        # chunks served already-resident
     residency_evictions: int = 0   # LRU evictions this call forced
+    # Matched-pixel cache accounting (DESIGN.md §7) — device-side PSF
+    # convolutions this call built vs reused; zero when matching is off,
+    # the Pallas in-kernel path runs, or the cache is disabled.
+    matched_cache_builds: int = 0  # (layout, target) matched arrays built
+    matched_cache_hits: int = 0    # matched arrays served already-resident
+    # True residency high-water mark — the honest version of the advisory
+    # budget accounting; descriptive, not additive.  Streaming: budget +
+    # one in-flight window's operands, matched-pixel cache included.
+    # Eager: also counts the unmanaged whole-layout uploads and device
+    # banks, so matched mode reports raw + matched copies both resident.
+    peak_resident_bytes: int = 0
 
 
 @dataclasses.dataclass
@@ -353,6 +372,22 @@ def _coadd_scan_batch_sparse(
     return jax.vmap(one)(gates, qvecs, grids_ra, grids_dec)
 
 
+@jax.jit
+def _match_packs(pixels, kernels):
+    """Query-independent PSF matching of resident packs, on device.
+
+    (P, cap, H, W) pixels x (P, cap, ...) kernel bank -> matched pixels of
+    the same shape.  `lax.map` steps the pack axis so each step convolves
+    one (cap, H, W) pack — the *same* inner program `mapper.map_batch` runs
+    when the bank is threaded into a dispatch, which is what makes cached
+    and uncached matched pixels bitwise-identical (parity-tested).  No host
+    bytes move: both operands are already resident.
+    """
+    return jax.lax.map(
+        lambda xs: psf.convolve_batch(xs[0], xs[1]), (pixels, kernels)
+    )
+
+
 def _sync(x):
     """The streaming executors' ONE host sync, at reduce time (DESIGN.md §6).
 
@@ -385,6 +420,8 @@ class CoaddEngine:
         block_rows: Optional[int] = None,
         kernel_interpret: bool = True,
         match_psf_sigma: Optional[float] = None,
+        measured_psf: Optional[bool] = None,
+        matched_pixel_cache: bool = True,
         sparse: bool = True,
         device_budget_bytes: Optional[int] = None,
         stream_chunk_packs: Optional[int] = None,
@@ -394,6 +431,18 @@ class CoaddEngine:
         self.block_rows = block_rows  # None -> autotune per (npix, H, W)
         self.kernel_interpret = kernel_interpret
         self.match_psf_sigma = match_psf_sigma
+        # Measured-PSF homogenization (DESIGN.md §7): None = auto (use the
+        # survey's empirical stamps when present, separable Gaussian bank
+        # otherwise); True forces stamps (loud error if absent); False
+        # forces the Gaussian fallback — the parity-test baseline.
+        self.measured_psf = measured_psf
+        # Matched-pixel residency cache (§7): on the XLA map path the
+        # matching convolution is query-independent, so convolve ONCE per
+        # (layout, target) at residency time and cache the matched pixels
+        # under the device budget, instead of re-convolving inside every
+        # dispatch.  The Pallas path keeps its in-kernel recompute (the
+        # documented fusion tradeoff), so this flag is inert there.
+        self.matched_pixel_cache = matched_pixel_cache
         # Sparse execution (DESIGN.md §5): gather only the packs a gate
         # opens before scanning, and reblock degenerate layouts at residency
         # time.  False reproduces the dense masked-discard scan over every
@@ -413,12 +462,13 @@ class CoaddEngine:
         self._exec_cache: Dict[str, Tuple[PackedDataset, Optional[SlotRemap]]] = {}
         self._device_cache: Dict[str, DevicePackedDataset] = {}
         self._mesh_cache: Dict[Tuple, MeshResidentDataset] = {}
-        self._psf_banks: Dict[str, np.ndarray] = {}
-        self._psf_device: Dict[str, "jax.Array"] = {}
+        self._psf_banks: Dict[Tuple, np.ndarray] = {}
+        self._psf_device: Dict[Tuple, "jax.Array"] = {}
         self._pack_capacity = pack_capacity
         self.pack_upload_count = 0   # host->device uploads of pack pixels
         self.mesh_upload_count = 0   # host->mesh uploads of whole layouts
         self.dispatch_count = 0      # jitted device dispatches issued
+        self.matched_builds = 0      # device-side matched-pixel constructions
 
     # ----- dataset layouts (built lazily, cached) -----
     def dataset(self, layout: str) -> PackedDataset:
@@ -470,9 +520,16 @@ class CoaddEngine:
 
         A cache hit means a distributed job moves zero pixel bytes: its only
         host->mesh traffic is slot gates + query vectors + output grids.
+        The key carries the PSF state because the sharded dataset bakes in
+        its kernel bank — a retuned engine must re-shard, not silently
+        serve the old configuration's kernels.
         """
-        key = (layout, mesh, tuple(shard_axes))
+        key = (layout, mesh, tuple(shard_axes), self._psf_state())
         if key not in self._mesh_cache:
+            # Retune hygiene: one sharded copy per (layout, mesh, axes) —
+            # drop the old target's rather than pinning every historical one.
+            for k in [k for k in self._mesh_cache if k[:3] == key[:3]]:
+                del self._mesh_cache[k]
             exec_ds, _ = self.exec_dataset(layout)
             self._mesh_cache[key] = exec_ds.to_mesh(
                 mesh, tuple(shard_axes), psf_kernels=self.psf_kernel_bank(layout)
@@ -481,26 +538,120 @@ class CoaddEngine:
         return self._mesh_cache[key]
 
     # ----- PSF matching (kernel banks precomputed on host, cached) -----
-    def psf_kernel_bank(self, layout: str) -> Optional[np.ndarray]:
-        """(P, cap, K) per-slot matching kernels, or None when disabled."""
+    def _psf_state(self) -> Optional[Tuple]:
+        """Hashable id of the PSF configuration every kernel bank, matched-
+        pixel entry, chunk and mesh dataset derives from — (target,
+        measured-mode), or None when matching is off.  Every such cache
+        keys on this, so retuning either knob (the supported live-mutation
+        flow) misses instead of silently serving stale kernels."""
         if self.match_psf_sigma is None:
             return None
-        if layout not in self._psf_banks:
-            # Built against the *execution* form so the (P, cap) bank lines
-            # up slot-for-slot with the resident (possibly reblocked) arrays.
+        return (float(self.match_psf_sigma), self.measured_psf)
+
+    def psf_kernel_bank(self, layout: str) -> Optional[np.ndarray]:
+        """Per-slot matching kernels, or None when matching is disabled.
+
+        (P, cap, K, K) measured-PSF homogenization kernels when the layout
+        carries empirical stamps (`psf.homogenization_bank` — Fourier least
+        squares to the Gaussian target), the separable (P, cap, K) Gaussian
+        bank otherwise; ``measured_psf`` forces either side.  Built against
+        the *execution* form so the bank lines up slot-for-slot with the
+        resident (possibly reblocked) arrays.
+        """
+        if self.match_psf_sigma is None:
+            return None
+        # Keyed per (layout, psf-state), like the matched-pixel entries: an
+        # engine retuned to a new target or measured-mode must never reuse
+        # stale kernels.
+        key = (layout, self._psf_state())
+        if key not in self._psf_banks:
+            # Retune hygiene: keep one host bank per layout.
+            for k in [k for k in self._psf_banks if k[0] == layout]:
+                del self._psf_banks[k]
             exec_ds, _ = self.exec_dataset(layout)
-            self._psf_banks[layout] = psf.matching_kernel_bank(
-                exec_ds.floats["psf_sigma"], self.match_psf_sigma
+            measured = (
+                self.measured_psf if self.measured_psf is not None
+                else exec_ds.psf_stamps is not None
             )
-        return self._psf_banks[layout]
+            if measured:
+                if exec_ds.psf_stamps is None:
+                    raise ValueError(
+                        "measured_psf=True but the survey carries no PSF "
+                        "stamps (SurveyConfig.psf_stamps)"
+                    )
+                self._psf_banks[key] = psf.homogenization_bank(
+                    exec_ds.psf_stamps,
+                    exec_ds.floats["psf_sigma"],
+                    self.match_psf_sigma,
+                )
+            else:
+                self._psf_banks[key] = psf.matching_kernel_bank(
+                    exec_ds.floats["psf_sigma"], self.match_psf_sigma
+                )
+        return self._psf_banks[key]
 
     def _device_psf_kernels(self, layout: str):
         bank = self.psf_kernel_bank(layout)
         if bank is None:
             return None
-        if layout not in self._psf_device:
-            self._psf_device[layout] = jnp.asarray(bank)
-        return self._psf_device[layout]
+        key = (layout, self._psf_state())
+        if key not in self._psf_device:
+            # Retune hygiene: one device bank per layout — drop the old
+            # target's copy rather than pinning every historical one.
+            for k in [k for k in self._psf_device if k[0] == layout]:
+                del self._psf_device[k]
+            self._psf_device[key] = jnp.asarray(bank)
+        return self._psf_device[key]
+
+    # ----- matched-pixel residency cache (DESIGN.md §7) -----
+    def _matched_mode(self) -> bool:
+        """Whether dispatches read cached matched pixels instead of a bank.
+
+        Only the XLA map path qualifies: the Pallas kernel fuses the
+        convolution into the warp on purpose (recompute-for-fusion), so
+        caching would buy it nothing but HBM.
+        """
+        return (
+            self.match_psf_sigma is not None
+            and not self.use_kernel
+            and self.matched_pixel_cache
+        )
+
+    def _matched_device_dataset(
+        self, layout: str, dev: DevicePackedDataset
+    ) -> Tuple[DevicePackedDataset, int]:
+        """The eager layout with pixels replaced by PSF-matched pixels.
+
+        A *derived* residency entry keyed (layout, target): built once per
+        engine by convolving the resident pixels with the device bank —
+        on-device compute, zero H2D — and served from the LRU afterwards.
+        Metadata/wcs alias the raw resident arrays, so the cache charges
+        only the matched pixel bytes.  Returns (dataset, hits) where hits
+        is 1 when the entry was already resident.
+        """
+        key = ("matched", layout, self._psf_state())
+        # Retune hygiene: the eager manager never evicts (budget None), so
+        # shed the previous target's whole-layout matched copy explicitly —
+        # retunes must not pin one full pixel array per historical target.
+        self.residency.drop_matching(
+            lambda k: k[:2] == ("matched", layout) and k != key
+        )
+        hits0 = self.residency.hits
+
+        def build():
+            kern = self._device_psf_kernels(layout)
+            self.matched_builds += 1
+            return DevicePackedDataset(
+                pixels=_match_packs(dev.pixels, kern),
+                wcs=dev.wcs,
+                ints=dev.ints,
+                floats=dev.floats,
+            )
+
+        payload = self.residency.acquire(
+            key, int(dev.pixels.nbytes), build, h2d=False
+        )
+        return payload, self.residency.hits - hits0
 
     # ----- streaming residency (DESIGN.md §6) -----
     def _bank_pack_nbytes(self, layout: str) -> int:
@@ -524,19 +675,60 @@ class CoaddEngine:
 
     def _resident_chunk(self, layout: str, exec_ds: PackedDataset,
                         start: int, stop: int):
-        """(DevicePackedDataset, psf chunk) for packs [start, stop), via LRU."""
-        key = (layout, start, stop)
+        """(DevicePackedDataset, psf chunk) for packs [start, stop), via LRU.
+
+        In matched mode (§7) the chunk *is* the matched-pixel cache: the
+        raw pixels upload once, the query-independent matching convolution
+        runs on device right behind the transfer, and only the matched
+        chunk stays resident — repeat queries hit the LRU and pay neither
+        the upload nor the convolution.  The key carries the PSF target so
+        engines retuned to a different target never alias.
+        """
+        matched = self._matched_mode()
+        # The payload embeds PSF state either way (matched pixels, or the
+        # bank slice riding alongside), so the key always carries the
+        # psf-state: a retuned engine must miss, not reuse stale kernels.
+        state = self._psf_state()
+        key = (
+            (layout, start, stop, "matched", state)
+            if matched else (layout, start, stop, state)
+        )
 
         def build():
             dev = exec_ds.to_device_chunk(start, stop)
             bank = self.psf_kernel_bank(layout)
-            kern = None if bank is None else jax.device_put(bank[start:stop])
             self.pack_upload_count += 1
+            if matched:
+                self.matched_builds += 1
+                dev = DevicePackedDataset(
+                    pixels=_match_packs(
+                        dev.pixels, jnp.asarray(bank[start:stop])
+                    ),
+                    wcs=dev.wcs,
+                    ints=dev.ints,
+                    floats=dev.floats,
+                )
+                return (dev, None)
+            kern = None if bank is None else jax.device_put(bank[start:stop])
             return (dev, kern)
 
-        nbytes = (exec_ds.chunk_nbytes(start, stop)
-                  + (stop - start) * self._bank_pack_nbytes(layout))
-        return self.residency.acquire(key, nbytes, build)
+        nbytes = exec_ds.chunk_nbytes(start, stop) + (
+            0 if matched
+            else (stop - start) * self._bank_pack_nbytes(layout)
+        )
+        # A matched build transiently holds the raw pixel chunk AND the
+        # bank slice alive next to its matched copy until the convolution
+        # retires — declare both so peak_bytes reports the true build-time
+        # footprint.  (The unmatched branch's bank slice stays resident and
+        # is already counted inside ``nbytes``.)
+        transient = (
+            (int(exec_ds.pixels[0].nbytes) + self._bank_pack_nbytes(layout))
+            * (stop - start)
+            if matched else 0
+        )
+        return self.residency.acquire(
+            key, nbytes, build, transient_bytes=transient
+        )
 
     # ----- shared helpers -----
     def _grids(self, query: CoaddQuery):
@@ -551,6 +743,7 @@ class CoaddEngine:
         return warp_ops.autotune_block_rows(
             query.npix, h, w,
             psf_kernel_width=0 if bank is None else bank.shape[-1],
+            psf_kernel_2d=bank is not None and bank.ndim == 4,
         )
 
     # ----- planning: the six methods differ ONLY in gate construction -----
@@ -566,7 +759,7 @@ class CoaddEngine:
         gate = ds.valid.copy()
         t_locate = time.perf_counter() - t0
         return CoaddPlan("raw_fits", "per_file", gate, _query_vec(query),
-                         query, t_locate)
+                         query, t_locate, psf_target=self.match_psf_sigma)
 
     def plan_raw_fits_prefiltered(self, query: CoaddQuery) -> CoaddPlan:
         ds = self.dataset("per_file")
@@ -575,7 +768,8 @@ class CoaddEngine:
         gate = ds.valid & mask[:, None]  # per-file layout: pack == file
         t_locate = time.perf_counter() - t0
         return CoaddPlan("raw_fits_prefiltered", "per_file", gate,
-                         _query_vec(query), query, t_locate)
+                         _query_vec(query), query, t_locate,
+                         psf_target=self.match_psf_sigma)
 
     def plan_unstructured_seq(self, query: CoaddQuery) -> CoaddPlan:
         ds = self.dataset("unstructured")
@@ -583,7 +777,8 @@ class CoaddEngine:
         gate = ds.valid.copy()  # unprunable by construction: read every pack
         t_locate = time.perf_counter() - t0
         return CoaddPlan("unstructured_seq", "unstructured", gate,
-                         _query_vec(query), query, t_locate)
+                         _query_vec(query), query, t_locate,
+                         psf_target=self.match_psf_sigma)
 
     def plan_structured_seq_prefiltered(self, query: CoaddQuery) -> CoaddPlan:
         ds = self.dataset("structured")
@@ -592,7 +787,8 @@ class CoaddEngine:
         gate = ds.valid & mask[:, None]
         t_locate = time.perf_counter() - t0
         return CoaddPlan("structured_seq_prefiltered", "structured", gate,
-                         _query_vec(query), query, t_locate)
+                         _query_vec(query), query, t_locate,
+                         psf_target=self.match_psf_sigma)
 
     def _plan_sql(self, layout: str, query: CoaddQuery, method: str) -> CoaddPlan:
         ds = self.dataset(layout)
@@ -603,7 +799,8 @@ class CoaddEngine:
         # pixel movement at all.
         gate = ds.slot_mask(ids)
         t_locate = time.perf_counter() - t0
-        return CoaddPlan(method, layout, gate, _query_vec(query), query, t_locate)
+        return CoaddPlan(method, layout, gate, _query_vec(query), query,
+                         t_locate, psf_target=self.match_psf_sigma)
 
     def plan_sql_unstructured(self, query: CoaddQuery) -> CoaddPlan:
         return self._plan_sql("unstructured", query, "sql_unstructured")
@@ -693,6 +890,7 @@ class CoaddEngine:
         block_rows = self._block_rows(plan.query, ds)
         windows = self._stream_windows(exec_ds, gate.any(axis=1))
         qvec = jnp.asarray(plan.qvec)
+        m_builds0 = self.matched_builds
 
         def dispatch(dev, kern, win):
             return _coadd_scan_sparse(
@@ -730,6 +928,11 @@ class CoaddEngine:
             chunk_uploads=uploads,
             residency_hits=hits,
             residency_evictions=evictions,
+            # In matched mode the chunk cache IS the matched-pixel cache:
+            # a resident chunk hit reuses the convolution with the upload.
+            matched_cache_builds=self.matched_builds - m_builds0,
+            matched_cache_hits=hits if self._matched_mode() else 0,
+            peak_resident_bytes=self._peak_resident_bytes(),
         )
         return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
 
@@ -744,6 +947,7 @@ class CoaddEngine:
         Under a device budget the query streams instead
         (`_execute_streaming`): windowed scans over budget-sized chunks.
         """
+        self._check_plan_psf(plan)
         if self.device_budget_bytes is not None:
             return self._execute_streaming(plan)
         ds = self.dataset(plan.layout)
@@ -753,6 +957,12 @@ class CoaddEngine:
         grid_ra, grid_dec = self._grids(plan.query)
         block_rows = self._block_rows(plan.query, ds)
         psf_kernels = self._device_psf_kernels(plan.layout)
+        m_builds0, m_hits = self.matched_builds, 0
+        if self._matched_mode():
+            # §7: the dispatch reads pre-matched resident pixels; no bank
+            # operand, no per-query convolution.
+            dev, m_hits = self._matched_device_dataset(plan.layout, dev)
+            psf_kernels = None
         sp = self._sparse_index(gate)
         t1 = time.perf_counter()
         self.dispatch_count += 1
@@ -802,8 +1012,44 @@ class CoaddEngine:
             packs_gated=int(gate.any(axis=1).sum()),
             packs_scanned=scanned,
             scan_budget=scanned,
+            matched_cache_builds=self.matched_builds - m_builds0,
+            matched_cache_hits=m_hits,
+            peak_resident_bytes=self._peak_resident_bytes(),
         )
         return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
+
+    def _eager_resident_bytes(self) -> int:
+        """Device bytes resident *outside* the ResidencyManager: the eager
+        whole-layout uploads (`_device_cache`) and device kernel banks.
+        Added to the manager's peak in JobStats so eager matched mode —
+        raw pixels AND their matched copy simultaneously resident — reports
+        the true single-host footprint, not just the managed half."""
+        total = 0
+        for dev in self._device_cache.values():
+            total += int(dev.pixels.nbytes) + int(dev.wcs.nbytes)
+            total += sum(int(v.nbytes) for v in dev.ints.values())
+            total += sum(int(v.nbytes) for v in dev.floats.values())
+        total += sum(int(b.nbytes) for b in self._psf_device.values())
+        return total
+
+    def _peak_resident_bytes(self) -> int:
+        """The JobStats peak: managed high-water mark + unmanaged eager
+        residents (zero under a device budget, where nothing is eager)."""
+        return self.residency.peak_bytes + self._eager_resident_bytes()
+
+    def _check_plan_psf(self, plan: CoaddPlan) -> None:
+        """A plan built under one PSF target must not run under another.
+
+        Kernel banks and the matched-pixel cache are keyed per target, so
+        executing a stale plan on a retuned engine would silently stack
+        images homogenized to a different PSF than the plan promised.
+        """
+        if plan.psf_target != self.match_psf_sigma:
+            raise ValueError(
+                f"plan was built with psf_target={plan.psf_target} but this "
+                f"engine matches to {self.match_psf_sigma}; re-plan on the "
+                "engine that will execute"
+            )
 
     def run(self, query: CoaddQuery, method: str) -> CoaddResult:
         return self.execute(self.plan(query, method))
@@ -826,6 +1072,8 @@ class CoaddEngine:
         own slots — K queries remain ONE dispatch over one gathered layout.
         """
         plans = list(plans)
+        for p in plans:
+            self._check_plan_psf(p)
         gates, qvecs = stack_plans(plans)
         layout = plans[0].layout
         ds = self.dataset(layout)
@@ -842,6 +1090,10 @@ class CoaddEngine:
             )
         dev = self.device_dataset(layout)
         psf_kernels = self._device_psf_kernels(layout)
+        m_builds0, m_hits = self.matched_builds, 0
+        if self._matched_mode():
+            dev, m_hits = self._matched_device_dataset(layout, dev)
+            psf_kernels = None
         sp = self._sparse_index(gates)
         t1 = time.perf_counter()
         self.dispatch_count += 1
@@ -899,6 +1151,10 @@ class CoaddEngine:
                 packs_gated=int(gates[i].any(axis=1).sum()),
                 packs_scanned=scanned if i == 0 else 0,
                 scan_budget=scanned,
+                matched_cache_builds=(self.matched_builds - m_builds0)
+                if i == 0 else 0,
+                matched_cache_hits=m_hits if i == 0 else 0,
+                peak_resident_bytes=self._peak_resident_bytes(),
             )
             results.append(
                 CoaddResult(np.asarray(coadds[i]), np.asarray(depths[i]), stats)
@@ -919,6 +1175,7 @@ class CoaddEngine:
         union_any = gates.any(axis=0).any(axis=1)
         windows = self._stream_windows(exec_ds, union_any)
         qvecs_j = jnp.asarray(qvecs)
+        m_builds0 = self.matched_builds
 
         def dispatch(dev, kern, win):
             return _coadd_scan_batch_sparse(
@@ -962,6 +1219,11 @@ class CoaddEngine:
                 chunk_uploads=uploads if i == 0 else 0,
                 residency_hits=hits if i == 0 else 0,
                 residency_evictions=evictions if i == 0 else 0,
+                matched_cache_builds=(self.matched_builds - m_builds0)
+                if i == 0 else 0,
+                matched_cache_hits=hits
+                if (i == 0 and self._matched_mode()) else 0,
+                peak_resident_bytes=self._peak_resident_bytes(),
             )
             results.append(
                 CoaddResult(np.asarray(coadds[i]), np.asarray(depths[i]), stats)
@@ -1196,7 +1458,8 @@ class CoaddEngine:
         def mesh_window(a: int, b: int) -> MeshResidentDataset:
             if self.device_budget_bytes is None:
                 return self.mesh_dataset("structured", mesh, shard_axes)
-            key = ("mesh", "structured", mesh, tuple(shard_axes), a, b)
+            key = ("mesh", "structured", mesh, tuple(shard_axes), a, b,
+                   self._psf_state())
 
             def build():
                 self.mesh_upload_count += 1
@@ -1303,6 +1566,7 @@ class CoaddEngine:
                 residency_hits=(self.residency.hits - hit0) if qi == 0 else 0,
                 residency_evictions=(self.residency.evictions - ev0)
                 if qi == 0 else 0,
+                peak_resident_bytes=self._peak_resident_bytes(),
             )
             results.append(
                 CoaddResult(np.asarray(coadds[qi]), np.asarray(depths[qi]), stats)

@@ -122,7 +122,7 @@ def gather_packs(
     wcs_vecs: jnp.ndarray,   # (P, cap, 8)
     ints: dict,              # (P, cap) int32 columns
     floats: dict,            # (P, cap) float32 columns
-    psf_kernels: jnp.ndarray | None = None,  # (P, cap, K) or None
+    psf_kernels: jnp.ndarray | None = None,  # (P, cap, K) / (P, cap, K, K)
 ):
     """Gather gated pack(s) out of the resident arrays along the pack axis.
 
@@ -156,14 +156,20 @@ def map_batch(
     use_kernel: bool = False,
     block_rows: int | None = None,
     interpret: bool = True,
-    psf_kernels: jnp.ndarray | None = None,  # (N, K) from matching_kernel_bank
+    psf_kernels: jnp.ndarray | None = None,  # (N, K) separable rows or
+                                             # (N, K, K) measured-PSF taps
 ):
     """vmapped map stage over a batch of images -> (tiles, coverages).
 
     When ``psf_kernels`` is given, each image is first convolved to the
-    engine's common target PSF (separable, per-slot kernel row) — the
-    PSF-matching step the paper deferred, inserted before warping so the
-    projected tiles all share one point-spread function.
+    engine's common target PSF — the PSF-matching step the paper deferred,
+    inserted before warping so the projected tiles all share one
+    point-spread function.  `psf.convolve_batch` dispatches on bank rank:
+    separable (N, K) Gaussian rows, or full (N, K, K) measured-PSF
+    homogenization taps (DESIGN.md §7).  The engine's matched-pixel cache
+    usually pre-applies this on the XLA path (then ``psf_kernels`` arrives
+    as None here); this in-dispatch hook remains the uncached baseline and
+    the distributed/mesh path.
     """
     if psf_kernels is not None:
         from repro.core import psf

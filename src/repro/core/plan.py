@@ -28,7 +28,7 @@ executor gathers just those packs out of the resident layout with
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -45,6 +45,11 @@ class CoaddPlan:
     qvec: np.ndarray       # (7,) float32 device-side acceptance vector
     query: CoaddQuery
     t_locate_s: float      # host job-init cost (prefilter/index, Fig. 8)
+    # PSF homogenization target the plan was built under (None = matching
+    # off).  Executors validate it against their own configuration: kernel
+    # banks and the matched-pixel cache are keyed per target, so running a
+    # stale plan on a retuned engine would silently stack mismatched PSFs.
+    psf_target: Optional[float] = None
 
     @property
     def npix(self) -> int:

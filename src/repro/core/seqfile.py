@@ -117,6 +117,23 @@ class ResidencyManager:
     chunk evicted while its scan is still enqueued stays valid for exactly
     as long as that scan needs it.  ``budget_bytes=None`` disables eviction
     (everything stays resident, the eager contract).
+
+    Two classes of entry share the budget:
+
+    * **uploaded** chunks (``h2d=True``, the default) — pixels crossing
+      host->device; counted in ``uploads``/``bytes_uploaded``.
+    * **derived** entries (``h2d=False``) — arrays *computed on device*
+      from already-resident operands, e.g. the PSF matched-pixel cache.
+      They occupy budget bytes like anything else but add zero H2D
+      traffic, so they get their own ``derived_builds``/``derived_bytes``
+      counters and never inflate the upload accounting tests pin.
+
+    ``peak_bytes`` reports *true* peak residency, not the advisory budget:
+    eviction is drop-the-reference, so a chunk evicted while the most
+    recently served entry's scan is still in flight stays alive device-side
+    until that scan retires — the honest high-water mark is the resident
+    bytes after an insert **plus** the in-flight entry the insert displaced
+    (budget + one window's operands, matched-pixel cache included).
     """
 
     def __init__(self, budget_bytes: Optional[int] = None):
@@ -124,10 +141,14 @@ class ResidencyManager:
             raise ValueError(f"budget_bytes must be positive, got {budget_bytes}")
         self.budget_bytes = budget_bytes
         self._lru: "OrderedDict[Tuple, ResidentEntry]" = OrderedDict()
-        self.uploads = 0        # builder invocations (chunk misses)
-        self.hits = 0           # chunks served without an upload
+        self.uploads = 0        # builder invocations (chunk misses, H2D)
+        self.hits = 0           # entries served without a build
         self.evictions = 0      # entries dropped to make room
         self.bytes_uploaded = 0 # cumulative H2D bytes across all misses
+        self.derived_builds = 0 # device-computed entries built (no H2D)
+        self.derived_bytes = 0  # cumulative bytes of derived builds
+        self.peak_bytes = 0     # true peak residency (see class docstring)
+        self._last_key: Optional[Tuple] = None  # most recently served entry
 
     @property
     def bytes_resident(self) -> int:
@@ -137,30 +158,73 @@ class ResidencyManager:
     def n_resident(self) -> int:
         return len(self._lru)
 
-    def acquire(self, key: Tuple, nbytes: int, build: Callable[[], Any]) -> Any:
-        """Return the resident payload for ``key``, uploading on miss."""
+    def acquire(
+        self,
+        key: Tuple,
+        nbytes: int,
+        build: Callable[[], Any],
+        h2d: bool = True,
+        transient_bytes: int = 0,
+    ) -> Any:
+        """Return the resident payload for ``key``, building on miss.
+
+        ``h2d=False`` marks a *derived* entry (computed on device from
+        resident operands): budget-counted, but not upload-counted.
+        ``transient_bytes`` declares device bytes the *build itself* holds
+        alive beyond the entry (e.g. the raw pixel chunk a matched-pixel
+        build convolves from, dropped once the convolution retires) — they
+        join the peak candidate so the high-water mark stays honest.
+        """
         entry = self._lru.get(key)
         if entry is not None:
             self._lru.move_to_end(key)
             self.hits += 1
+            self._last_key = key
             return entry.payload
+        in_flight = 0
         if self.budget_bytes is not None:
             # Evict LRU-first until the newcomer fits.  A chunk larger than
             # the whole budget still loads (the scan needs it); the budget
             # is then transiently exceeded by that one chunk, never by two.
             while self._lru and self.bytes_resident + nbytes > self.budget_bytes:
-                _, evicted = self._lru.popitem(last=False)
+                evicted_key, evicted = self._lru.popitem(last=False)
                 self.evictions += 1
+                if evicted_key == self._last_key:
+                    # The entry a consumer may still be scanning: its
+                    # buffers outlive the eviction until that scan retires.
+                    in_flight = evicted.nbytes
         payload = build()
         self._lru[key] = ResidentEntry(key, payload, nbytes)
-        self.uploads += 1
-        self.bytes_uploaded += nbytes
+        if h2d:
+            self.uploads += 1
+            self.bytes_uploaded += nbytes
+        else:
+            self.derived_builds += 1
+            self.derived_bytes += nbytes
+        self.peak_bytes = max(
+            self.peak_bytes,
+            self.bytes_resident + in_flight + max(transient_bytes, 0),
+        )
+        self._last_key = key
         return payload
+
+    def drop_matching(self, pred: Callable[[Tuple], bool]) -> int:
+        """Drop entries whose key satisfies ``pred`` (a deliberate release
+        — e.g. a retuned engine shedding the old PSF target's matched
+        pixels — not budget pressure, so ``evictions`` is untouched;
+        reference-drop semantics as ever)."""
+        stale = [k for k in self._lru if pred(k)]
+        for k in stale:
+            del self._lru[k]
+            if k == self._last_key:
+                self._last_key = None
+        return len(stale)
 
     def clear(self) -> None:
         """Drop every resident entry (a reset, not budget pressure — the
         ``evictions`` counter tracks only LRU evictions forced by misses)."""
         self._lru.clear()
+        self._last_key = None
 
 
 @dataclasses.dataclass
@@ -205,6 +269,11 @@ class PackedDataset:
     pack_band: np.ndarray
     pack_camcol: np.ndarray
     index: Dict[int, Tuple[int, int]]  # image_id -> (pack, slot)
+    # Measured-PSF calibration column (paper footnote 2): a fixed-size
+    # (P, cap, S, S) stamp per slot, or None when the survey carries none.
+    # Host-only — the engine turns stamps into a device kernel bank
+    # (`psf.homogenization_bank`) at plan time; raw stamps never upload.
+    psf_stamps: Optional[np.ndarray] = None
 
     @property
     def n_packs(self) -> int:
@@ -409,6 +478,12 @@ class PackedDataset:
         pixels[dest_p, dest_s] = self.pixels[pp, ss]
         wcs[dest_p, dest_s] = self.wcs[pp, ss]
         valid[dest_p, dest_s] = True
+        psf_stamps = None
+        if self.psf_stamps is not None:
+            psf_stamps = np.zeros(
+                (n_packs, capacity) + self.psf_stamps.shape[2:], np.float32
+            )
+            psf_stamps[dest_p, dest_s] = self.psf_stamps[pp, ss]
         for k in self.ints:
             ints[k][dest_p, dest_s] = self.ints[k][pp, ss]
         for k in self.floats:
@@ -434,6 +509,7 @@ class PackedDataset:
             pack_band=pack_key(ints["band_id"]),
             pack_camcol=pack_key(ints["camcol"]),
             index=index,
+            psf_stamps=psf_stamps,
         )
         rb_pack = np.full(self.valid.shape, -1, np.int32)
         rb_slot = np.full(self.valid.shape, -1, np.int32)
@@ -488,12 +564,19 @@ def _emit(
     ints = {k: np.full((P, cap), -1, np.int32) for k in META_COLS}
     floats = {k: np.zeros((P, cap), np.float32) for k in FLOAT_COLS}
     index: Dict[int, Tuple[int, int]] = {}
+    stamp0 = survey.images[0].psf_stamp if len(survey.images) else None
+    psf_stamps = (
+        None if stamp0 is None
+        else np.zeros((P, cap) + stamp0.shape, np.float32)
+    )
     for p, ids in enumerate(groups):
         for s, img_id in enumerate(ids):
             im = survey.images[int(img_id)]
             pixels[p, s] = im.pixels
             wcs[p, s] = im.wcs.to_vector()
             valid[p, s] = True
+            if psf_stamps is not None:
+                psf_stamps[p, s] = im.psf_stamp
             for k in META_COLS:
                 ints[k][p, s] = tab[k][img_id]
             for k in FLOAT_COLS:
@@ -509,6 +592,7 @@ def _emit(
         pack_band=np.array(group_band, np.int32),
         pack_camcol=np.array(group_camcol, np.int32),
         index=index,
+        psf_stamps=psf_stamps,
     )
 
 

@@ -47,6 +47,17 @@ class SurveyConfig:
     n_sources: int = 600            # global point-source catalog size
     source_flux_max: float = 100.0
     psf_sigma_px: float = 1.2
+    # Measured-PSF calibration products (paper footnote 2): every image gets
+    # an empirical PSF stamp — an elliptical Moffat at the run's seeing with
+    # per-image ellipticity jitter — the way production pipelines carry a
+    # fitted PSF model per exposure.  `moffat_beta=None` degrades the stamps
+    # to circular Gaussians (the closure-testable case); `psf_stamps=False`
+    # drops them entirely, which is what exercises the engine's separable
+    # Gaussian fallback.
+    psf_stamps: bool = True
+    psf_stamp_size: int = 13        # odd tap grid; also the kernel-bank width
+    moffat_beta: Optional[float] = 3.5
+    psf_ellip_jitter: float = 0.08  # per-image |e| scale (e1, e2 components)
     background: float = 10.0
     noise_sigma: float = 3.0
     rotation_jitter_deg: float = 0.4
@@ -80,6 +91,7 @@ class SurveyImage:
     bounds: tuple          # (ra_min, ra_max, dec_min, dec_max)
     pixels: np.ndarray     # (H, W) float32
     psf_sigma: float = 1.2  # per-image seeing (px); drives PSF matching
+    psf_stamp: Optional[np.ndarray] = None  # (S, S) measured PSF model, sum 1
 
     @property
     def band(self) -> str:
@@ -152,6 +164,40 @@ def _render_image(
     return img.astype(np.float32)
 
 
+def render_psf_stamp(
+    sigma: float,
+    size: int,
+    beta: Optional[float] = None,
+    e1: float = 0.0,
+    e2: float = 0.0,
+) -> np.ndarray:
+    """(size, size) unit-sum empirical PSF stamp, centered.
+
+    ``beta=None`` renders a circular/elliptical Gaussian; otherwise an
+    elliptical Moffat whose FWHM matches a Gaussian of width ``sigma`` —
+    Moffat wings are the canonical non-Gaussianity of real seeing, which is
+    exactly what makes the Fourier least-squares homogenization kernel a
+    different object from the closed-form Gaussian matching kernel.
+    The (e1, e2) shear components tilt the quadratic form at unit area.
+    """
+    if size % 2 == 0:
+        raise ValueError(f"stamp size must be odd, got {size}")
+    c = (size - 1) / 2.0
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float64)
+    xx -= c
+    yy -= c
+    # Unit-determinant shear: |e| < 1 keeps the form positive definite.
+    r2 = (1 + e1) * xx**2 + (1 - e1) * yy**2 + 2 * e2 * xx * yy
+    r2 /= max(np.sqrt(max(1.0 - e1**2 - e2**2, 1e-6)), 1e-6)
+    if beta is None:
+        img = np.exp(-0.5 * r2 / max(sigma, 1e-6) ** 2)
+    else:
+        fwhm = 2.0 * np.sqrt(2.0 * np.log(2.0)) * sigma
+        alpha = fwhm / (2.0 * np.sqrt(2.0 ** (1.0 / beta) - 1.0))
+        img = (1.0 + r2 / alpha**2) ** (-beta)
+    return (img / img.sum()).astype(np.float32)
+
+
 def make_survey(config: Optional[SurveyConfig] = None) -> Survey:
     cfg = config or SurveyConfig()
     rng = np.random.default_rng(cfg.seed)
@@ -200,6 +246,23 @@ def make_survey(config: Optional[SurveyConfig] = None) -> Survey:
                     pix_rng = np.random.default_rng(
                         cfg.seed + 7 * image_id + 13 * band_id + 1
                     )
+                    # Separate stream: stamp jitter must not perturb the
+                    # pixel noise draws existing surveys are seeded on.
+                    # Sequence-seeded (not an affine scalar formula) so it
+                    # can never collide with the pixel RNG's
+                    # ``seed + 7*id + 13*band + 1`` lattice.
+                    stamp = None
+                    if cfg.psf_stamps:
+                        stamp_rng = np.random.default_rng(
+                            (cfg.seed, 2, image_id)
+                        )
+                        e1, e2 = stamp_rng.normal(
+                            0.0, cfg.psf_ellip_jitter, size=2
+                        ).clip(-0.3, 0.3)
+                        stamp = render_psf_stamp(
+                            seeing, cfg.psf_stamp_size, cfg.moffat_beta,
+                            float(e1), float(e2),
+                        )
                     pixels = _render_image(
                         wcs,
                         cfg.height,
@@ -224,6 +287,7 @@ def make_survey(config: Optional[SurveyConfig] = None) -> Survey:
                             bounds=bounds,
                             pixels=pixels,
                             psf_sigma=seeing,
+                            psf_stamp=stamp,
                         )
                     )
                     image_id += 1

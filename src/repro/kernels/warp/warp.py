@@ -60,6 +60,7 @@ def autotune_block_rows(
     vmem_budget_bytes: int = 4 << 20,
     candidates=(128, 64, 48, 32, 24, 16, 12, 8, 6, 4, 3, 2, 1),
     psf_kernel_width: int = 0,
+    psf_kernel_2d: bool = False,
 ) -> int:
     """Largest ``block_rows`` dividing ``q`` whose grid step fits the budget.
 
@@ -70,13 +71,21 @@ def autotune_block_rows(
     variant runs (``psf_kernel_width`` > 0), each step additionally holds the
     (h, h) and (w, w) band matrices, the convolved image copy, and the
     kernel row — a block_rows-independent term, but it still shrinks the
-    space left for the row blocks.  The default budget leaves ample headroom
-    in ~16 MB of VMEM for double buffering.
+    space left for the row blocks.  The measured-PSF 2-D variant
+    (``psf_kernel_2d``) rebuilds a band pair per kernel row; only one pair is
+    live at a time, but its (Kh, Kw) tap block and the accumulating output
+    copy join the image, so the constant term grows by ~h*w + K^2.
+    The default budget leaves ample headroom in ~16 MB of VMEM for double
+    buffering.
     """
-    psf_bytes = (
-        4 * (h * h + w * w + h * w + psf_kernel_width)
-        if psf_kernel_width > 1 else 0
-    )
+    if psf_kernel_width > 1 and psf_kernel_2d:
+        psf_bytes = 4 * (
+            h * h + w * w + 2 * h * w + psf_kernel_width * psf_kernel_width
+        )
+    elif psf_kernel_width > 1:
+        psf_bytes = 4 * (h * h + w * w + h * w + psf_kernel_width)
+    else:
+        psf_bytes = 0
     for b in candidates:
         if b > q or q % b:
             continue
@@ -181,6 +190,42 @@ def _convolve_sep_matmul(image, kernel):
     m_w = _conv_band_matrix(kernel, w, image.dtype)
     out = jnp.dot(image, m_w.T, preferred_element_type=jnp.float32)   # rows
     return jnp.dot(m_h, out, preferred_element_type=jnp.float32)      # cols
+
+
+def _convolve_2d_matmul(image, kern2d):
+    """Non-separable 2-D PSF correlation as Kh banded-matmul pairs.
+
+    The measured-PSF homogenization kernels (`psf.homogenization_bank`) are
+    full (Kh, Kw) tap grids — no separable factorization exists for an
+    elliptical Moffat matching kernel.  Decompose by kernel *row* instead:
+
+      out = sum_m  S_m @ (image @ W_m.T)
+
+    where W_m is the banded matrix applying kernel row m along the width
+    axis (`_conv_band_matrix` — a correlation with edge clamp) and S_m is
+    the one-band row-shift selection ``S_m[i, j] = [j == clip(i+m-rh)]``.
+    Both factors are iota-built dense matrices, so the whole convolution is
+    2*Kh MXU matmuls — the same gather-as-matmul reformulation as the
+    bilinear row gather (§2), which is what lets the PSF-matched image stay
+    in registers instead of round-tripping through HBM.  Semantics match
+    `psf.convolve_2d` exactly: edge-clamped cross-correlation.
+    """
+    kh, kw = kern2d.shape
+    if kh == 1 and kw == 1:
+        return image * kern2d[0, 0]
+    h, w = image.shape
+    rh = (kh - 1) // 2
+    rows = jax.lax.broadcasted_iota(jnp.int32, (h, h), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (h, h), 1)
+    out = jnp.zeros_like(image)
+    for m in range(kh):
+        w_m = _conv_band_matrix(kern2d[m], w, image.dtype)
+        row_sel = (cols == jnp.clip(rows + (m - rh), 0, h - 1)).astype(
+            image.dtype
+        )
+        shifted = jnp.dot(image, w_m.T, preferred_element_type=jnp.float32)
+        out = out + jnp.dot(row_sel, shifted, preferred_element_type=jnp.float32)
+    return out
 
 
 def _warp_kernel(wcs_ref, accept_ref, image_ref, gra_ref, gdec_ref, tile_ref, cov_ref):
@@ -289,6 +334,40 @@ def _coadd_fused_psf_kernel(
         depth_ref[...] += cov * a
 
 
+def _coadd_fused_psf2d_kernel(
+    wcs_ref, accept_ref, kern_ref, image_ref, gra_ref, gdec_ref, coadd_ref, depth_ref
+):
+    """`_coadd_fused_kernel` + in-kernel *measured-PSF* homogenization.
+
+    The per-slot operand is a full (Kh, Kw) tap grid from
+    `psf.homogenization_bank` (non-separable — elliptical Moffat matching
+    kernels don't factor), applied as Kh banded-matmul pairs
+    (`_convolve_2d_matmul`) before the warp, so the homogenized image never
+    round-trips through HBM.  Same recompute tradeoff as the separable
+    variant: the convolution depends only on the image index but runs once
+    per (row_block, image) grid step — q/block_rows-fold recompute that
+    cannot be hoisted without breaking the accumulate-innermost idiom.  The
+    engine's matched-pixel cache (DESIGN.md §7) is the other end of that
+    tradeoff: convolve once at residency time, spend HBM instead of MXU.
+    """
+    i = pl.program_id(1)
+    w = wcs_ref[0, :]
+    a = accept_ref[0, 0]
+    img = _convolve_2d_matmul(image_ref[0], kern_ref[0])
+    sx, sy = _sky_to_pixel(gra_ref[...], gdec_ref[...], w)
+    val, cov = _bilinear_via_matmul(img, sx, sy)
+
+    @pl.when(i == 0)
+    def _init():
+        coadd_ref[...] = val * a
+        depth_ref[...] = cov * a
+
+    @pl.when(i > 0)
+    def _accum():
+        coadd_ref[...] += val * a
+        depth_ref[...] += cov * a
+
+
 def coadd_fused(
     pixels: jnp.ndarray,    # (N, H, W)
     wcs_vecs: jnp.ndarray,  # (N, 8)
@@ -296,7 +375,7 @@ def coadd_fused(
     grid_ra: jnp.ndarray,   # (Q, Q)
     grid_dec: jnp.ndarray,  # (Q, Q)
     *,
-    psf_kernels: jnp.ndarray | None = None,  # (N, K) matching-kernel bank rows
+    psf_kernels: jnp.ndarray | None = None,  # (N, K) rows or (N, K, K) taps
     block_rows: int = 8,
     interpret: bool = True,
 ):
@@ -322,7 +401,13 @@ def coadd_fused(
         grid_dec,
     ]
     kernel_fn = _coadd_fused_kernel
-    if psf_kernels is not None:
+    if psf_kernels is not None and psf_kernels.ndim == 3:
+        # Measured-PSF bank: one (Kh, Kw) non-separable tap grid per slot.
+        kh, kw = psf_kernels.shape[1], psf_kernels.shape[2]
+        in_specs.insert(2, pl.BlockSpec((1, kh, kw), lambda r, i: (i, 0, 0)))
+        operands.insert(2, psf_kernels.astype(jnp.float32))
+        kernel_fn = _coadd_fused_psf2d_kernel
+    elif psf_kernels is not None:
         k_width = psf_kernels.shape[1]
         in_specs.insert(2, pl.BlockSpec((1, k_width), lambda r, i: (i, 0)))
         operands.insert(2, psf_kernels.astype(jnp.float32))

@@ -226,7 +226,8 @@ def test_distributed_mesh_resident_no_regather(survey, monkeypatch):
     r1 = eng.run_distributed([q], mesh)[0]
     assert r1.depth.max() > 0
     assert eng.mesh_upload_count == 1
-    mds = eng._mesh_cache[("structured", mesh, ("data", "model"))]
+    # Cache key carries the PSF target (None when matching is off).
+    mds = eng._mesh_cache[("structured", mesh, ("data", "model"), None)]
 
     def _no_gather(self, *a, **k):
         raise AssertionError("host pixel gather on a repeat distributed job")
@@ -237,7 +238,7 @@ def test_distributed_mesh_resident_no_regather(survey, monkeypatch):
                     npix=32)
     r2 = eng.run_distributed([q2], mesh)[0]
     assert eng.mesh_upload_count == 1
-    assert eng._mesh_cache[("structured", mesh, ("data", "model"))] is mds
+    assert eng._mesh_cache[("structured", mesh, ("data", "model"), None)] is mds
     # And the cached-shard answer still matches the single-host path.
     ref = eng.run(q2, "sql_structured")
     np.testing.assert_allclose(r2.coadd, ref.coadd, atol=1e-2, rtol=1e-4)

@@ -1,0 +1,271 @@
+"""Property-based suite for measured-PSF homogenization (ISSUE 5 satellite).
+
+Four properties pin the `psf.homogenization_bank` contract:
+
+1. **Flux conservation** — every matching kernel sums to 1, so homogenizing
+   never creates or destroys flux.
+2. **Target fidelity** — a point source seen through a measured
+   (elliptical-Moffat, non-Gaussian) PSF, convolved with its matching
+   kernel, reproduces the target Gaussian PSF to <= 1e-3 RMS.
+3. **Gaussian closure** — Gaussian stamps reproduce the existing separable
+   `matching_kernel_bank` path (the measured machinery degrades to the
+   analytic case).
+4. **Monotonicity** — matching never deconvolves: stamps already wider
+   than the target clamp to delta kernels (with a warning), and the
+   homogenized width is never below the input width.
+
+Each property is a plain ``_check_*`` helper driven two ways: a seeded
+deterministic grid (always runs, keeps the properties in the tier-1 lane
+even where hypothesis isn't installed) and a hypothesis `@given` search
+(runs wherever hypothesis is available; CI's nightly lane runs it with a
+fixed seed and ``--hypothesis-show-statistics``).
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import psf
+from repro.core.survey import render_psf_stamp
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the deterministic grids below still run
+    HAVE_HYPOTHESIS = False
+
+# A wider tap grid than the survey default (13): the properties quantify
+# kernel *fidelity*, so the grid must not be the limiting factor — at 17
+# taps the worst-domain RMS is ~5e-4, a 2x margin under the 1e-3 bar,
+# while the same code path serves both widths.
+STAMP = 17
+
+
+def _moffat(sigma, e1, e2, beta=3.5, size=STAMP):
+    return np.asarray(render_psf_stamp(sigma, size, beta, e1, e2), np.float64)
+
+
+def _apply(stamp, kernel):
+    return np.asarray(psf.convolve_2d(jnp.asarray(stamp), jnp.asarray(kernel)))
+
+
+# Seeded deterministic parameter grid: (sigma_image, sigma_target, e1, e2).
+_rng = np.random.default_rng(82)
+GRID = [
+    (
+        float(_rng.uniform(0.8, 1.45)),
+        float(_rng.uniform(2.0, 2.6)),
+        float(_rng.uniform(-0.12, 0.12)),
+        float(_rng.uniform(-0.12, 0.12)),
+    )
+    for _ in range(8)
+]
+
+
+# ----- property 1: flux conservation -----
+
+def _check_flux_conserved(sigma, target, e1, e2):
+    stamp = _moffat(sigma, e1, e2)
+    bank = psf.homogenization_bank(
+        np.asarray([stamp]), np.asarray([sigma]), target
+    )
+    np.testing.assert_allclose(bank.sum(axis=(-2, -1)), 1.0, atol=1e-5)
+    # ...and therefore convolution preserves total image flux.
+    img = np.full((24, 24), 3.0, np.float64)
+    out = _apply(img, bank[0])
+    np.testing.assert_allclose(out.sum(), img.sum(), rtol=1e-5)
+
+
+@pytest.mark.parametrize("sigma,target,e1,e2", GRID)
+def test_flux_conserved_grid(sigma, target, e1, e2):
+    _check_flux_conserved(sigma, target, e1, e2)
+
+
+# ----- property 2: point source homogenizes to the target PSF -----
+
+def _check_point_source_matches_target(sigma, target, e1, e2):
+    """A point source imaged through the measured PSF *is* the stamp;
+    homogenized, it must become the target PSF — the acceptance bar is
+    1e-3 RMS (ISSUE 5)."""
+    stamp = _moffat(sigma, e1, e2)
+    bank = psf.homogenization_bank(
+        np.asarray([stamp]), np.asarray([sigma]), target
+    )
+    out = _apply(stamp, bank[0])
+    target_img = psf.gaussian_stamp(target, STAMP)
+    rms = float(np.sqrt(((out - target_img) ** 2).mean()))
+    assert rms <= 1e-3, (rms, sigma, target, e1, e2)
+
+
+@pytest.mark.parametrize("sigma,target,e1,e2", GRID)
+def test_point_source_matches_target_grid(sigma, target, e1, e2):
+    _check_point_source_matches_target(sigma, target, e1, e2)
+
+
+# ----- property 3: Gaussian stamps reproduce the separable path -----
+
+def _check_gaussian_closure(sigma, target):
+    """homogenization_bank(Gaussian stamps) == matching_kernel_bank applied
+    image-for-image: the measured path degrades to the analytic one."""
+    stamp = np.asarray(render_psf_stamp(sigma, STAMP, beta=None), np.float64)
+    bank2d = psf.homogenization_bank(
+        np.asarray([stamp]), np.asarray([sigma]), target
+    )
+    bank1d = psf.matching_kernel_bank(
+        np.asarray([sigma]), target, radius=(STAMP - 1) // 2
+    )
+    img = np.asarray(psf.gaussian_stamp(sigma, 33), np.float32)
+    out2d = np.asarray(
+        psf.convolve_batch(jnp.asarray(img)[None], jnp.asarray(bank2d))
+    )[0]
+    out1d = np.asarray(
+        psf.convolve_batch(jnp.asarray(img)[None], jnp.asarray(bank1d))
+    )[0]
+    assert np.abs(out2d - out1d).max() < 5e-3, (sigma, target)
+
+
+@pytest.mark.parametrize(
+    "sigma,target", [(s, t) for s, t, _, _ in GRID[:5]]
+)
+def test_gaussian_closure_grid(sigma, target):
+    _check_gaussian_closure(sigma, target)
+
+
+# ----- property 4: matching is monotone (never deconvolves) -----
+
+def _check_monotone_clamp(sigma, e1, e2):
+    """A stamp wider than the target clamps to a delta (+warns), and the
+    homogenized width never drops below the input width."""
+    stamp = _moffat(sigma, e1, e2)
+    narrow_target = 0.5 * float(psf.stamp_sigma(stamp))
+    with pytest.warns(RuntimeWarning, match="never deconvolves"):
+        bank = psf.homogenization_bank(
+            np.asarray([stamp]), np.asarray([sigma]), narrow_target
+        )
+    delta = np.zeros((STAMP, STAMP), np.float32)
+    delta[(STAMP - 1) // 2, (STAMP - 1) // 2] = 1.0
+    np.testing.assert_array_equal(bank[0], delta)
+    # Widening direction: output width >= input width.
+    wide_target = 2.8
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # no clamp warning expected here
+        bank_w = psf.homogenization_bank(
+            np.asarray([stamp]), np.asarray([sigma]), wide_target
+        )
+    out = _apply(stamp, bank_w[0])
+    assert psf.stamp_sigma(out) >= psf.stamp_sigma(stamp) - 1e-6
+
+
+@pytest.mark.parametrize("sigma,e1,e2", [(s, e1, e2) for s, _, e1, e2 in GRID])
+def test_monotone_clamp_grid(sigma, e1, e2):
+    _check_monotone_clamp(sigma, e1, e2)
+
+
+def test_bank_matches_single_kernel_reference():
+    """The bank's batched Fourier solve must equal `homogenization_kernel`
+    slot-for-slot — the single-stamp function is the readable reference
+    implementation, and this pin is what keeps the two from diverging."""
+    rng = np.random.default_rng(7)
+    stamps = np.stack([
+        _moffat(float(s), float(e1), float(e2))
+        for s, e1, e2 in rng.uniform([0.9, -0.1, -0.1], [1.4, 0.1, 0.1], (6, 3))
+    ])
+    target = 2.2
+    bank = psf.homogenization_bank(stamps, np.full(6, 1.2), target)
+    ref = np.stack([
+        psf.homogenization_kernel(st, psf.gaussian_stamp(target, STAMP))
+        for st in stamps
+    ]).astype(np.float32)
+    np.testing.assert_array_equal(bank, ref)
+
+
+def test_engine_retune_rebuilds_bank():
+    """Regression: retuning match_psf_sigma on a live engine must not reuse
+    the previous target's kernel bank (caches are keyed per target)."""
+    from repro.core import CoaddEngine, CoaddQuery, SurveyConfig, make_survey
+
+    sv = make_survey(SurveyConfig(n_runs=2, n_fields=3, n_sources=40,
+                                  height=16, width=16))
+    q = CoaddQuery(band="r", ra_bounds=(37.2, 37.7), dec_bounds=(-0.5, 0.3),
+                   npix=32)
+    eng = CoaddEngine(sv, pack_capacity=16, match_psf_sigma=2.0)
+    r_20 = eng.run(q, "sql_structured")
+    eng.match_psf_sigma = 2.6
+    r_26_retuned = eng.run(q, "sql_structured")
+    fresh = CoaddEngine(sv, pack_capacity=16, match_psf_sigma=2.6)
+    r_26_fresh = fresh.run(q, "sql_structured")
+    np.testing.assert_array_equal(r_26_retuned.coadd, r_26_fresh.coadd)
+    assert np.abs(r_26_retuned.coadd - r_20.coadd).max() > 1e-3
+    # ...and must not leak the old target's whole-layout matched copy or
+    # device bank (the eager manager never evicts; drop is explicit).
+    assert eng.residency.n_resident == 1
+    assert len(eng._psf_device) == 1 and len(eng._psf_banks) == 1
+    # Toggling the measured-mode knob is the same hazard: the Gaussian
+    # fallback must not be served the stale measured bank.
+    eng.measured_psf = False
+    r_fallback = eng.run(q, "sql_structured")
+    fresh_fb = CoaddEngine(sv, pack_capacity=16, match_psf_sigma=2.6,
+                           measured_psf=False)
+    np.testing.assert_array_equal(
+        r_fallback.coadd, fresh_fb.run(q, "sql_structured").coadd
+    )
+    assert np.abs(r_fallback.coadd - r_26_retuned.coadd).max() > 1e-4
+
+
+def test_empty_slots_get_delta_rows():
+    """sigma<=0 or zero-sum stamps (padded slots) must yield exact deltas
+    and never widen or warn."""
+    stamp = _moffat(1.2, 0.05, -0.03)
+    zeros = np.zeros_like(stamp)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        bank = psf.homogenization_bank(
+            np.stack([stamp, zeros, stamp]),
+            np.asarray([1.2, 0.0, -1.0]),
+            2.0,
+        )
+    delta = np.zeros((STAMP, STAMP), np.float32)
+    delta[(STAMP - 1) // 2, (STAMP - 1) // 2] = 1.0
+    np.testing.assert_array_equal(bank[1], delta)
+    np.testing.assert_array_equal(bank[2], delta)
+    assert np.abs(bank[0] - delta).max() > 1e-3  # real slot really matches
+
+
+# ----- hypothesis-driven search over the same properties -----
+
+if HAVE_HYPOTHESIS:
+    _common = settings(
+        deadline=None,
+        max_examples=20,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    # sigma stays below ~1.45: a beta=3.5 Moffat's second-moment width is
+    # ~1.28x its Gaussian-equivalent sigma, so wider seeing crosses the
+    # target and (correctly) clamps — the clamp property tests that region.
+    _sigma = st.floats(0.8, 1.45)
+    _target = st.floats(2.0, 2.6)
+    _e = st.floats(-0.12, 0.12)
+
+    @_common
+    @given(sigma=_sigma, target=_target, e1=_e, e2=_e)
+    def test_flux_conserved_hypothesis(sigma, target, e1, e2):
+        _check_flux_conserved(sigma, target, e1, e2)
+
+    @_common
+    @given(sigma=_sigma, target=_target, e1=_e, e2=_e)
+    def test_point_source_matches_target_hypothesis(sigma, target, e1, e2):
+        _check_point_source_matches_target(sigma, target, e1, e2)
+
+    @_common
+    @given(sigma=_sigma, target=_target)
+    def test_gaussian_closure_hypothesis(sigma, target):
+        _check_gaussian_closure(sigma, target)
+
+    @_common
+    @given(sigma=_sigma, e1=_e, e2=_e)
+    def test_monotone_clamp_hypothesis(sigma, e1, e2):
+        _check_monotone_clamp(sigma, e1, e2)

@@ -290,3 +290,63 @@ def test_distributed_streaming_and_shard_budgets_8dev():
                        text=True, timeout=420, env=env)
     assert r.returncode == 0, r.stdout + "\n" + r.stderr
     assert "OK" in r.stdout
+
+
+# ----- true peak-residency accounting (ISSUE 5 satellite) -------------------
+
+
+def test_peak_residency_pinned_under_4x_oversubscription(survey):
+    """The ROADMAP eviction-accounting fix: `ResidencyManager.peak_bytes`
+    must report the *true* high-water mark — budget + one in-flight
+    window's operands — not the advisory budget, and stats must surface it.
+    Pinned at 4x oversubscription where eviction churn is guaranteed."""
+    stream = _budgeted(survey, frac=4)
+    r = stream.run(QUERY, "structured_seq_prefiltered")
+    assert r.stats.residency_evictions > 0 or r.stats.windows >= 2
+    peak = stream.residency.peak_bytes
+    assert r.stats.peak_resident_bytes == peak
+    assert peak > 0
+    # One window's operands = the largest chunk ever resident.
+    ds = stream.exec_dataset("structured")[0]
+    chunk_bytes = ds.chunk_nbytes(0, stream._chunk_packs(ds))
+    assert peak <= stream.device_budget_bytes + chunk_bytes, (
+        peak, stream.device_budget_bytes, chunk_bytes)
+
+
+def test_peak_residency_counts_in_flight_eviction():
+    """Unit-level: evicting the entry a consumer is still scanning must
+    charge its bytes to the peak (budget + one window), while evicting a
+    cold entry must not."""
+    # Cold eviction first: the LRU victim is NOT the last-served entry, so
+    # its buffers are genuinely free — peak stays at the budget.
+    mgr = ResidencyManager(budget_bytes=100)
+    mgr.acquire(("a",), 50, lambda: "A")
+    mgr.acquire(("b",), 50, lambda: "B")      # resident a+b = 100, b in flight
+    mgr.acquire(("c",), 50, lambda: "C")      # evicts a (cold) -> b+c = 100
+    assert mgr.evictions == 1
+    assert mgr.peak_bytes == 100
+    # In-flight eviction: inserting d(100) evicts b (cold) then c — and c
+    # is the last-served entry a scan may still hold, so its 50 bytes ride
+    # on top of the resident 100: budget + one window's operands.
+    mgr.acquire(("d",), 100, lambda: "D")
+    assert mgr.evictions == 3
+    assert mgr.peak_bytes == 100 + 50
+    # Declared build-time transients (e.g. the raw chunk a matched-pixel
+    # build convolves from) join the peak candidate too.
+    mgr.acquire(("e",), 100, lambda: "E", transient_bytes=30)
+    assert mgr.peak_bytes == 100 + 100 + 30  # e + in-flight d + transient
+
+
+def test_peak_residency_includes_matched_cache(survey):
+    """Derived matched-pixel entries are budget bytes too: the eager
+    matched cache must appear in peak accounting without any H2D upload —
+    and the reported peak must count BOTH copies (raw resident layout +
+    matched derivative), the true eager footprint."""
+    eng = CoaddEngine(survey, pack_capacity=8, match_psf_sigma=2.0)
+    r = eng.run(QUERY, "sql_structured")
+    dev = eng.device_dataset("structured")
+    assert eng.residency.peak_bytes >= int(dev.pixels.nbytes)
+    assert eng.residency.uploads == 0          # derived, not uploaded
+    assert eng.residency.derived_builds == 1
+    # raw pixels (unmanaged eager upload) + matched pixels (managed entry)
+    assert r.stats.peak_resident_bytes >= 2 * int(dev.pixels.nbytes)
