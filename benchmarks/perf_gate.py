@@ -12,6 +12,12 @@ With no baseline (first run on a branch, expired artifacts) the current
 report is its own baseline: the gate degrades to a self-consistency pass
 and says so, rather than failing closed on missing history.
 
+Independently of any baseline, the fault-tracker clean-path overhead row
+(``fault_overhead`` in the report) is gated absolutely at
+``--fault-threshold`` (default 1.1x): the WindowTracker must not cost more
+than 10% over the untracked streaming loop, and its result must be bitwise
+identical.
+
   python -m benchmarks.perf_gate --current BENCH_coadd.json \
       [--baseline path.json] [--history old_trajectory.jsonl] \
       [--trajectory BENCH_trajectory.jsonl] [--threshold 1.5] \
@@ -66,6 +72,36 @@ def gate(current: Dict, baseline: Dict, threshold: float) -> Tuple[List[str], Li
     return regressions, lines
 
 
+def fault_overhead_gate(current: Dict, threshold: float) -> Tuple[List[str], List[str]]:
+    """Self-contained gate on the fault tracker's clean-path cost (§8).
+
+    Unlike the us/image rows this needs no baseline artifact: the tracker-on
+    and tracker-off engines ran side by side in the same --quick invocation,
+    so the ratio (and the bitwise agreement of their results) is gated
+    absolutely, at <= ``threshold``.
+    """
+    rec = current.get("fault_overhead")
+    if not rec:
+        return [], ["  fault_overhead: no rows (old artifact?)"]
+    ratio = float(rec["overhead_ratio"])
+    regressions: List[str] = []
+    lines = [
+        f"  fault_overhead: tracker on {rec['us_per_image_tracker_on']:.1f} "
+        f"vs off {rec['us_per_image_tracker_off']:.1f} us/img "
+        f"({ratio:.3f}x, gate <= {threshold:.2f}x)"
+    ]
+    if ratio > threshold:
+        regressions.append(
+            f"fault_overhead: {ratio:.3f}x > {threshold:.2f}x clean-path budget"
+        )
+    if not rec.get("bitwise_equal", True):
+        regressions.append(
+            "fault_overhead: tracker-on result differs from tracker-off "
+            "(scheduling must never change arithmetic)"
+        )
+    return regressions, lines
+
+
 def trajectory_row(current: Dict, sha: str, ref: str) -> Dict:
     """One compact history row: us/image per row + the streaming headline."""
     row = {
@@ -76,6 +112,9 @@ def trajectory_row(current: Dict, sha: str, ref: str) -> Dict:
         "ref": ref,
         "us_per_image": _us_per_image_rows(current),
     }
+    fo = current.get("fault_overhead")
+    if fo:
+        row["fault_overhead_ratio"] = fo.get("overhead_ratio")
     streaming = current.get("streaming")
     if streaming:
         row["streaming"] = {
@@ -95,6 +134,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="base-branch BENCH_coadd.json; missing/absent path "
                          "=> self-baseline (gate passes trivially)")
     ap.add_argument("--threshold", type=float, default=1.5)
+    ap.add_argument("--fault-threshold", type=float, default=1.1,
+                    help="absolute ceiling on the WindowTracker clean-path "
+                         "overhead ratio (tracker-on vs tracker-off)")
     ap.add_argument("--history", default=None,
                     help="base-branch BENCH_trajectory.jsonl to extend")
     ap.add_argument("--trajectory", default="BENCH_trajectory.jsonl")
@@ -117,6 +159,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     print(f"perf-gate: threshold {args.threshold:.2f}x, "
           f"{len(lines)} us/image rows compared:")
     print("\n".join(lines))
+
+    fault_regressions, fault_lines = fault_overhead_gate(
+        current, args.fault_threshold)
+    print("perf-gate: fault-tracker clean-path overhead:")
+    print("\n".join(fault_lines))
+    regressions += fault_regressions
 
     # Extend the trajectory: base history (if any) + this run's row.
     if args.history and os.path.exists(args.history) \

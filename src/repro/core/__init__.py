@@ -2,11 +2,29 @@
 
 Public API:
   CoaddQuery, make_survey, SurveyConfig, CoaddEngine, METHODS,
-  SpatialIndex, JobTracker.
+  SpatialIndex, JobTracker, WindowTracker, ChaosInjector.
 """
 
 from repro.core.engine import METHODS, CoaddEngine, CoaddResult, JobStats
-from repro.core.jobtracker import FailureInjector, JobTracker, MapTask
+from repro.core.faults import (
+    ChaosInjector,
+    DeterminismError,
+    FatalFault,
+    FaultError,
+    FaultSchedule,
+    PoisonSpec,
+    PoisonedChunkError,
+    QueryKilled,
+    TransientFault,
+    classify,
+)
+from repro.core.jobtracker import (
+    FailureInjector,
+    FaultCounters,
+    JobTracker,
+    MapTask,
+    WindowTracker,
+)
 from repro.core.plan import (
     CoaddPlan,
     ScanWindow,
@@ -23,21 +41,33 @@ from repro.core.survey import Survey, SurveyConfig, make_survey
 
 __all__ = [
     "BANDS",
+    "ChaosInjector",
     "CoaddEngine",
     "CoaddPlan",
     "CoaddResult",
     "CoaddQuery",
+    "DeterminismError",
     "FailureInjector",
+    "FatalFault",
+    "FaultCounters",
+    "FaultError",
+    "FaultSchedule",
     "JobStats",
     "JobTracker",
     "MapTask",
     "METHODS",
+    "PoisonSpec",
+    "PoisonedChunkError",
+    "QueryKilled",
     "ResidencyManager",
     "ScanWindow",
     "SparseScanIndex",
     "SpatialIndex",
     "Survey",
     "SurveyConfig",
+    "TransientFault",
+    "WindowTracker",
+    "classify",
     "make_survey",
     "scan_budget",
     "sparse_pack_index",

@@ -61,9 +61,11 @@ restores the dense masked-discard scan over every pack.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
+from collections import OrderedDict
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +73,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import mapper, psf, reducer
+from repro.core.faults import ChaosInjector, PoisonedChunkError
+from repro.core.jobtracker import FaultCounters, WindowTracker
 from repro.core.plan import (
     CoaddPlan,
     ScanWindow,
@@ -165,6 +169,17 @@ class JobStats:
     # Eager: also counts the unmanaged whole-layout uploads and device
     # banks, so matched mode reports raw + matched copies both resident.
     peak_resident_bytes: int = 0
+    # Fault-domain accounting (DESIGN.md §8) — what the WindowTracker did
+    # to finish this query.  Counters are additive (batched jobs put them
+    # on the first result); ``partial``/``uncovered_packs`` are
+    # descriptive and reported on every result of a job.  All zero/False
+    # on the eager path and on clean tracked runs.
+    retries: int = 0               # failed attempts that were re-executed
+    speculative_windows: int = 0   # straggler backups launched (digest-verified)
+    quarantined_packs: int = 0     # packs gated out after persistent poison
+    resumed_windows: int = 0       # journal hits replayed instead of re-run
+    partial: bool = False          # True when quarantine removed coverage
+    uncovered_packs: Tuple[int, ...] = ()  # exec-layout packs quarantined out
 
 
 @dataclasses.dataclass
@@ -425,6 +440,12 @@ class CoaddEngine:
         sparse: bool = True,
         device_budget_bytes: Optional[int] = None,
         stream_chunk_packs: Optional[int] = None,
+        on_fault: str = "retry",
+        fault_max_attempts: int = 3,
+        fault_backoff_s: float = 0.05,
+        straggler_factor: Optional[float] = None,
+        verify_digests: bool = False,
+        fault_injector: Optional[ChaosInjector] = None,
     ):
         self.survey = survey
         self.use_kernel = use_kernel
@@ -455,7 +476,39 @@ class CoaddEngine:
         # device memory run correctly, just with more windows.
         self.device_budget_bytes = device_budget_bytes
         self.stream_chunk_packs = stream_chunk_packs  # None -> budget/2 sizing
+        # Fault policy (DESIGN.md §8): how the streaming executors respond
+        # to upload failures, poisoned chunks, and stragglers.
+        #   "retry"      — WindowTracker re-executes transient failures with
+        #                  capped exponential backoff (the default);
+        #   "quarantine" — like retry, but persistent poison gates the bad
+        #                  packs out and the query completes partial=True;
+        #   "raise"      — no tracker at all: any fault aborts the query
+        #                  (the zero-overhead baseline BENCH compares against).
+        if on_fault not in ("retry", "quarantine", "raise"):
+            raise ValueError(
+                f"on_fault must be 'retry', 'quarantine', or 'raise'; "
+                f"got {on_fault!r}"
+            )
+        self.on_fault = on_fault
+        self.fault_max_attempts = fault_max_attempts
+        self.fault_backoff_s = fault_backoff_s
+        # Speculative re-execution of straggler windows (off by default):
+        # timing a window means blocking on it, so enabling this trades the
+        # one-sync-at-reduce-time contract for straggler detection — the
+        # documented speculation cost (§8).
+        self.straggler_factor = straggler_factor
+        # Chunk verification scope: the NaN/Inf scan always runs on tracked
+        # builds; digest comparison against the host seqfile (catches finite
+        # corruption) is opt-in because it costs a sha256 per pack per build.
+        self.verify_digests = verify_digests
+        self.fault_injector = fault_injector
+        # Window-partial journals of killed queries, keyed by job key and
+        # capped: a re-issued query replays only its missing windows.
+        self._journals: "OrderedDict[str, Dict]" = OrderedDict()
+        self._journal_cap = 16
         self.residency = ResidencyManager(device_budget_bytes)
+        if fault_injector is not None:
+            self.residency.fault_hook = fault_injector.on_upload
         self.camcol_dec = camcol_dec_table(survey)
         self.sql = SpatialIndex.build(survey)
         self._datasets: Dict[str, PackedDataset] = {}
@@ -673,8 +726,58 @@ class CoaddEngine:
         fit = int(self.device_budget_bytes // (2 * pack_bytes))
         return max(1, min(fit, exec_ds.n_packs))
 
+    @property
+    def _fault_tolerant(self) -> bool:
+        """Whether streaming queries run through the WindowTracker (§8)."""
+        return self.on_fault != "raise"
+
+    @property
+    def _verify_chunks(self) -> bool:
+        """Whether chunk builds stage-and-verify host pixels before upload.
+
+        On whenever faults are handled *or* injected: with ``on_fault=
+        "raise"`` plus an injector, poison is still detected — it just
+        aborts the query (the loud baseline) instead of healing.
+        """
+        return self._fault_tolerant or self.fault_injector is not None
+
+    def _staged_chunk_pixels(
+        self, exec_ds: PackedDataset, start: int, stop: int,
+        drop: FrozenSet[int],
+    ) -> Optional[np.ndarray]:
+        """Stage, verify, and sanitize a chunk's host pixels (DESIGN.md §8).
+
+        Returns the pixel array `to_device_chunk` should upload, or None to
+        upload the seqfile slice directly (verification off).  Injection
+        corrupts a *copy*; detection (NaN/Inf scan, plus digest comparison
+        against the host seqfile under ``verify_digests``) raises
+        `PoisonedChunkError` with the offending global pack indices; packs
+        in ``drop`` (already quarantined) are zeroed instead — pixel zeros,
+        not just gate falses, because a NaN surviving into the masked scan
+        would still poison the accumulator (NaN * 0 == NaN).
+        """
+        if not self._verify_chunks:
+            return None
+        px = exec_ds.pixels[start:stop]
+        if self.fault_injector is not None:
+            px = self.fault_injector.corrupt_chunk(start, stop, px)
+        drop_local = sorted(p - start for p in drop if start <= p < stop)
+        bad = exec_ds.verify_chunk(
+            start, stop, px,
+            skip=frozenset(p + start for p in drop_local),
+            check_digests=self.verify_digests,
+        )
+        if bad:
+            raise PoisonedChunkError(bad)
+        if drop_local:
+            if not px.flags.owndata:  # still a seqfile view: copy before zeroing
+                px = np.array(px, copy=True)
+            px[drop_local] = 0.0
+        return px
+
     def _resident_chunk(self, layout: str, exec_ds: PackedDataset,
-                        start: int, stop: int):
+                        start: int, stop: int,
+                        drop: FrozenSet[int] = frozenset()):
         """(DevicePackedDataset, psf chunk) for packs [start, stop), via LRU.
 
         In matched mode (§7) the chunk *is* the matched-pixel cache: the
@@ -683,6 +786,10 @@ class CoaddEngine:
         chunk stays resident — repeat queries hit the LRU and pay neither
         the upload nor the convolution.  The key carries the PSF target so
         engines retuned to a different target never alias.
+
+        ``drop`` lists quarantined global packs (§8): their rows upload as
+        zeros and the key carries them, so a sanitized chunk never aliases
+        the clean one.
         """
         matched = self._matched_mode()
         # The payload embeds PSF state either way (matched pixels, or the
@@ -693,9 +800,13 @@ class CoaddEngine:
             (layout, start, stop, "matched", state)
             if matched else (layout, start, stop, state)
         )
+        drop_here = tuple(sorted(p for p in drop if start <= p < stop))
+        if drop_here:
+            key = key + ("quarantine", drop_here)
 
         def build():
-            dev = exec_ds.to_device_chunk(start, stop)
+            staged = self._staged_chunk_pixels(exec_ds, start, stop, drop)
+            dev = exec_ds.to_device_chunk(start, stop, pixels=staged)
             bank = self.psf_kernel_bank(layout)
             self.pack_upload_count += 1
             if matched:
@@ -840,38 +951,129 @@ class CoaddEngine:
         return window_schedule(gated, exec_ds.n_packs,
                                self._chunk_packs(exec_ds))
 
+    def _job_key(self, method: str, layout: str, gates: np.ndarray,
+                 qvecs: np.ndarray, npix: int,
+                 windows: List[ScanWindow]) -> str:
+        """Cross-query identity of a streaming job's window journal (§8).
+
+        A digest over everything that determines a window partial's value —
+        method/layout/PSF state, the gate and query-vector bytes, the output
+        grid size, and the window partition itself — so a resumed query
+        replays journaled partials only when they are bitwise-valid for it.
+        """
+        h = hashlib.sha256()
+        h.update(
+            f"{method}|{layout}|{npix}|{self._psf_state()}".encode()
+        )
+        h.update(np.ascontiguousarray(gates).tobytes())
+        h.update(np.ascontiguousarray(qvecs, np.float32).tobytes())
+        for w in windows:
+            h.update(
+                np.array([w.start, w.stop, w.n_gated, w.budget], np.int64)
+                .tobytes()
+            )
+        return h.hexdigest()
+
+    def _journal_for(self, job_key: str) -> Dict:
+        """The (possibly resumed) window journal for a job, LRU-capped."""
+        journal = self._journals.get(job_key)
+        if journal is None:
+            journal = self._journals[job_key] = {}
+            while len(self._journals) > self._journal_cap:
+                self._journals.popitem(last=False)
+        else:
+            self._journals.move_to_end(job_key)
+        return journal
+
+    def _empty_streaming_result(self, plan: CoaddPlan) -> CoaddResult:
+        """The empty-selection answer under a device budget: exact zeros,
+        zero windows, zero uploads.  Streaming's analogue of the §5
+        empty-gate contract — and the guard that keeps the window-stat
+        reductions (`max` over budgets) off an empty schedule entirely."""
+        npix = plan.query.npix
+        stats = JobStats(
+            method=plan.method,
+            files_considered=0,
+            files_contributing=0,
+            packs_touched=0,
+            t_locate_s=plan.t_locate_s,
+            t_map_reduce_s=0.0,
+            t_total_s=plan.t_locate_s,
+            dispatches=0,
+            peak_resident_bytes=self._peak_resident_bytes(),
+        )
+        return CoaddResult(
+            np.zeros((npix, npix), np.float32),
+            np.zeros((npix, npix), np.float32),
+            stats,
+        )
+
     def _run_stream_windows(self, layout: str, exec_ds: PackedDataset,
-                            windows: List[ScanWindow], dispatch):
+                            windows: List[ScanWindow], dispatch,
+                            job_key: str):
         """Walk a window schedule: dispatch each window against its
         resident chunk, prefetch the next chunk (its async `device_put`
         rides behind the in-flight scan — the double buffer), accumulate
         the additive window partials on device, and host-sync ONCE at
-        reduce time.  ``dispatch(dev, kern, win)`` returns the partial
-        tuple; returns (partials, (uploads, hits, evictions), elapsed_s).
+        reduce time.  ``dispatch(dev, kern, win, dropped)`` returns the
+        partial tuple.
+
+        With ``on_fault="raise"`` this is the bare PR 4 loop (any failure
+        aborts the query — the zero-overhead baseline).  Otherwise every
+        window runs through a `WindowTracker` (§8): journaled under
+        ``job_key`` (a killed query resumes replaying only missing
+        windows), retried on transient faults, optionally speculated, and
+        quarantine-completed on persistent poison.
+
+        Returns (partials, (uploads, hits, evictions), elapsed_s,
+        FaultCounters, quarantined-pack tuple).
         """
         up0, hit0, ev0 = (self.residency.uploads, self.residency.hits,
                           self.residency.evictions)
         t1 = time.perf_counter()
-        cur = self._resident_chunk(layout, exec_ds,
-                                   windows[0].start, windows[0].stop)
-        acc = None
-        for i, win in enumerate(windows):
-            dev, kern = cur
-            self.dispatch_count += 1
-            out = dispatch(dev, kern, win)
-            acc = out if acc is None else tuple(
-                a + b for a, b in zip(acc, out)
+        if not self._fault_tolerant:
+            cur = self._resident_chunk(layout, exec_ds,
+                                       windows[0].start, windows[0].stop)
+            acc = None
+            for i, win in enumerate(windows):
+                dev, kern = cur
+                out = dispatch(dev, kern, win, frozenset())
+                acc = out if acc is None else tuple(
+                    a + b for a, b in zip(acc, out)
+                )
+                if i + 1 < len(windows):
+                    nxt = windows[i + 1]
+                    cur = self._resident_chunk(layout, exec_ds,
+                                               nxt.start, nxt.stop)
+            fc, quarantined = FaultCounters(), ()
+        else:
+            tracker = WindowTracker(
+                policy=self.on_fault,
+                max_attempts=self.fault_max_attempts,
+                backoff_s=self.fault_backoff_s,
+                straggler_factor=self.straggler_factor,
+                injector=self.fault_injector,
             )
-            if i + 1 < len(windows):
-                nxt = windows[i + 1]
-                cur = self._resident_chunk(layout, exec_ds,
-                                           nxt.start, nxt.stop)
+            acquire = lambda win, drop: self._resident_chunk(  # noqa: E731
+                layout, exec_ds, win.start, win.stop, drop=drop
+            )
+            disp = lambda ops, win, drop: dispatch(  # noqa: E731
+                ops[0], ops[1], win, drop
+            )
+            acc, quarantined = tracker.run(
+                windows, acquire, disp, self._journal_for(job_key)
+            )
+            # Completed: the journal has served its purpose.  (A kill or a
+            # fatal error raises out above this line, *keeping* the journal
+            # — that asymmetry is the resume contract.)
+            self._journals.pop(job_key, None)
+            fc, quarantined = tracker.counters, tuple(quarantined)
         _sync(acc[0])
         elapsed = time.perf_counter() - t1
         counters = (self.residency.uploads - up0,
                     self.residency.hits - hit0,
                     self.residency.evictions - ev0)
-        return acc, counters, elapsed
+        return acc, counters, elapsed, fc, quarantined
 
     def _execute_streaming(self, plan: CoaddPlan) -> CoaddResult:
         """Windowed query under a device budget (DESIGN.md §6).
@@ -886,13 +1088,26 @@ class CoaddEngine:
         ds = self.dataset(plan.layout)
         exec_ds, _ = self.exec_dataset(plan.layout)
         gate = self._exec_gate(plan)
+        if not gate.any():
+            # Empty selection: answer zeros without building a window
+            # schedule at all — no upload, no dispatch, and no window-stat
+            # reduction over an empty list.
+            return self._empty_streaming_result(plan)
         grid_ra, grid_dec = self._grids(plan.query)
         block_rows = self._block_rows(plan.query, ds)
         windows = self._stream_windows(exec_ds, gate.any(axis=1))
         qvec = jnp.asarray(plan.qvec)
-        m_builds0 = self.matched_builds
+        m_builds0, d0 = self.matched_builds, self.dispatch_count
 
-        def dispatch(dev, kern, win):
+        def dispatch(dev, kern, win, dropped):
+            g = gate
+            if dropped:
+                # Quarantined packs (§8): their pixels upload as zeros and
+                # their slots gate False, so depth/files accounting excludes
+                # them — the partial=True report is the honest answer.
+                g = gate.copy()
+                g[sorted(dropped)] = False
+            self.dispatch_count += 1
             return _coadd_scan_sparse(
                 dev.pixels,
                 dev.wcs,
@@ -900,7 +1115,7 @@ class CoaddEngine:
                 dev.floats,
                 kern,
                 jnp.asarray(win.pack_idx),
-                jnp.asarray(compact_window_gate(gate, win)),
+                jnp.asarray(compact_window_gate(g, win)),
                 qvec,
                 grid_ra,
                 grid_dec,
@@ -909,8 +1124,11 @@ class CoaddEngine:
                 interpret=self.kernel_interpret,
             )
 
-        (coadd, depth, contrib, considered), counters, elapsed = \
-            self._run_stream_windows(plan.layout, exec_ds, windows, dispatch)
+        job_key = self._job_key(plan.method, plan.layout, gate, plan.qvec,
+                                plan.query.npix, windows)
+        (coadd, depth, contrib, considered), counters, elapsed, fc, quar = \
+            self._run_stream_windows(plan.layout, exec_ds, windows, dispatch,
+                                     job_key)
         uploads, hits, evictions = counters
         stats = JobStats(
             method=plan.method,
@@ -920,7 +1138,7 @@ class CoaddEngine:
             t_locate_s=plan.t_locate_s,
             t_map_reduce_s=elapsed,
             t_total_s=plan.t_locate_s + elapsed,
-            dispatches=len(windows),
+            dispatches=self.dispatch_count - d0,
             packs_gated=int(gate.any(axis=1).sum()),
             packs_scanned=sum(w.budget for w in windows),
             scan_budget=max(w.budget for w in windows),
@@ -933,6 +1151,12 @@ class CoaddEngine:
             matched_cache_builds=self.matched_builds - m_builds0,
             matched_cache_hits=hits if self._matched_mode() else 0,
             peak_resident_bytes=self._peak_resident_bytes(),
+            retries=fc.retries,
+            speculative_windows=fc.speculative_windows,
+            quarantined_packs=fc.quarantined_packs,
+            resumed_windows=fc.resumed_windows,
+            partial=bool(quar),
+            uncovered_packs=quar,
         )
         return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
 
@@ -1172,12 +1396,21 @@ class CoaddEngine:
         host syncs once at the end.
         """
         layout = plans[0].layout
+        if not gates.any():
+            # Empty union: every query selected nothing — answer zeros
+            # without a window schedule (same contract as the single path).
+            return [self._empty_streaming_result(p) for p in plans]
         union_any = gates.any(axis=0).any(axis=1)
         windows = self._stream_windows(exec_ds, union_any)
         qvecs_j = jnp.asarray(qvecs)
-        m_builds0 = self.matched_builds
+        m_builds0, d0 = self.matched_builds, self.dispatch_count
 
-        def dispatch(dev, kern, win):
+        def dispatch(dev, kern, win, dropped):
+            g = gates
+            if dropped:
+                g = gates.copy()
+                g[:, sorted(dropped)] = False
+            self.dispatch_count += 1
             return _coadd_scan_batch_sparse(
                 dev.pixels,
                 dev.wcs,
@@ -1185,7 +1418,7 @@ class CoaddEngine:
                 dev.floats,
                 kern,
                 jnp.asarray(win.pack_idx),
-                jnp.asarray(compact_window_gates(gates, win)),
+                jnp.asarray(compact_window_gates(g, win)),
                 qvecs_j,
                 grids_ra,
                 grids_dec,
@@ -1194,8 +1427,11 @@ class CoaddEngine:
                 interpret=self.kernel_interpret,
             )
 
-        (coadds, depths, contribs, considered), counters, elapsed = \
-            self._run_stream_windows(layout, exec_ds, windows, dispatch)
+        job_key = self._job_key("batch:" + plans[0].method, layout, gates,
+                                qvecs, plans[0].npix, windows)
+        (coadds, depths, contribs, considered), counters, elapsed, fc, quar = \
+            self._run_stream_windows(layout, exec_ds, windows, dispatch,
+                                     job_key)
         uploads, hits, evictions = counters
         contribs = np.asarray(contribs)
         considered = np.asarray(considered)
@@ -1211,7 +1447,7 @@ class CoaddEngine:
                 t_locate_s=p.t_locate_s,
                 t_map_reduce_s=t_mr,
                 t_total_s=p.t_locate_s + t_mr,
-                dispatches=len(windows) if i == 0 else 0,
+                dispatches=(self.dispatch_count - d0) if i == 0 else 0,
                 packs_gated=int(gates[i].any(axis=1).sum()),
                 packs_scanned=scanned if i == 0 else 0,
                 scan_budget=max(w.budget for w in windows),
@@ -1224,6 +1460,14 @@ class CoaddEngine:
                 matched_cache_hits=hits
                 if (i == 0 and self._matched_mode()) else 0,
                 peak_resident_bytes=self._peak_resident_bytes(),
+                # Fault counters are additive -> first result; quarantine
+                # coverage loss affects every query in the batch -> all.
+                retries=fc.retries if i == 0 else 0,
+                speculative_windows=fc.speculative_windows if i == 0 else 0,
+                quarantined_packs=fc.quarantined_packs if i == 0 else 0,
+                resumed_windows=fc.resumed_windows if i == 0 else 0,
+                partial=bool(quar),
+                uncovered_packs=quar,
             )
             results.append(
                 CoaddResult(np.asarray(coadds[i]), np.asarray(depths[i]), stats)

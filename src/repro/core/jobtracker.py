@@ -1,4 +1,4 @@
-"""JobTracker: Hadoop-style task re-execution and speculative dispatch.
+"""Trackers: Hadoop-style task re-execution, speculation, and journaling.
 
 MapReduce's scaling premise (paper §3): at thousands of nodes, failures are
 the norm; the framework hides them by re-executing failed tasks and
@@ -8,36 +8,50 @@ what lets the coadd job survive node loss.
 On a TPU pod the analogue is necessarily different — an SPMD program cannot
 lose one participant mid-collective — so fault handling moves up a level:
 
-* the *work decomposition* stays Hadoop-shaped: the image set is split into
-  idempotent, journaled map tasks whose outputs combine through a
-  commutative monoid (coadd accumulation), so any task may be re-executed
-  or executed twice without changing the result;
+* the *work decomposition* stays Hadoop-shaped: work is split into
+  idempotent, journaled tasks whose outputs combine through a commutative
+  monoid (coadd accumulation), so any task may be re-executed or executed
+  twice without changing the result;
 * task completion is journaled with a content digest; restart replays only
   missing tasks (checkpoint/restart at the job level);
 * stragglers get speculative backups — first result wins, digests must
   agree (determinism check);
-* elastic scaling: the task list can be re-partitioned over a different
-  worker count between (re)starts, because tasks are location-free.
+* retries distinguish transient from fatal errors (`faults.classify`):
+  transient failures back off exponentially (capped) and re-execute, fatal
+  ones — above all `DeterminismError` — escape immediately.
 
-The same pattern backs the training loop's checkpoint/restart in
-`repro.launch.train`.
+Two trackers share that contract:
+
+* `JobTracker` — the original host-level API over explicit image-id shards
+  (`MapTask`), kept for elastic repartition demos and its tests;
+* `WindowTracker` — the streaming engine's fault domain (DESIGN.md §8):
+  each `ScanWindow` of a windowed query is one task.  It owns retry,
+  speculation, poison quarantine, and the window-partial journal the
+  engine's resume path replays.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import statistics
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Set
 
 import numpy as np
+
+from repro.core.faults import (
+    DeterminismError,
+    PoisonedChunkError,
+    QueryKilled,
+    classify,
+)
 
 
 @dataclasses.dataclass
 class MapTask:
     task_id: int
     image_ids: np.ndarray  # the shard of images this task maps
-
 
 @dataclasses.dataclass
 class TaskResult:
@@ -56,11 +70,35 @@ def _digest(coadd: np.ndarray, depth: np.ndarray) -> str:
     return h.hexdigest()[:16]
 
 
-class FailureInjector:
-    """Deterministic failure/straggler schedule for tests and drills.
+def partial_digest(parts) -> str:
+    """Content digest of a window's partial-accumulator tuple.
 
-    fail_plan: {(task_id, attempt): "fail" | "slow"}.
+    The idempotency token of a window task: speculation re-executes the
+    window and demands digest agreement.  Materializes the partial to host
+    (a sync) — which is why the tracker only digests when it must, never on
+    the clean streaming path.
     """
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(np.ascontiguousarray(np.asarray(p)).tobytes())
+    return h.hexdigest()[:16]
+
+
+class FailureInjector:
+    """Deterministic failure/straggler schedule for the legacy JobTracker.
+
+    fail_plan: {(task_id, attempt): kind} with kind one of ``"fail"``
+    (RuntimeError — transient by policy), ``"fail_transient"``/``"fail_os"``
+    (other transient types; the retry net must catch them too), ``"fail_fatal"``
+    (ValueError — must escape), or ``"slow"`` (sleep ``slow_s``).
+    """
+
+    _KINDS = {
+        "fail": RuntimeError,
+        "fail_transient": ConnectionError,
+        "fail_os": OSError,
+        "fail_fatal": ValueError,
+    }
 
     def __init__(self, plan: Optional[Dict] = None, slow_s: float = 0.0):
         self.plan = plan or {}
@@ -68,10 +106,16 @@ class FailureInjector:
 
     def before_run(self, task_id: int, attempt: int):
         kind = self.plan.get((task_id, attempt))
-        if kind == "fail":
-            raise RuntimeError(f"injected failure: task {task_id} attempt {attempt}")
-        if kind == "slow" and self.slow_s:
-            time.sleep(self.slow_s)
+        if kind is None:
+            return
+        if kind == "slow":
+            if self.slow_s:
+                time.sleep(self.slow_s)
+            return
+        exc = self._KINDS.get(kind)
+        if exc is None:
+            raise ValueError(f"unknown injection kind {kind!r}")
+        raise exc(f"injected {kind}: task {task_id} attempt {attempt}")
 
 
 class JobTracker:
@@ -120,7 +164,7 @@ class JobTracker:
             backup = self.executor(task.image_ids)
             bd = _digest(np.asarray(backup[0]), np.asarray(backup[1]))
             if bd != res.digest:
-                raise RuntimeError(
+                raise DeterminismError(
                     f"nondeterministic task {task.task_id}: {res.digest} != {bd}"
                 )
         return res
@@ -137,8 +181,15 @@ class JobTracker:
                     res = self._attempt(task, attempt, worker)
                     self.journal[task.task_id] = res
                     break
-                except RuntimeError as e:  # noqa: PERF203
-                    self.events.append(f"retry task={task.task_id} attempt={attempt}: {e}")
+                except Exception as e:  # noqa: PERF203
+                    # Transient-vs-fatal split (faults.classify): only
+                    # transient failures consume a retry; nondeterminism and
+                    # other fatal errors escape — re-rolling them is wrong.
+                    if classify(e) == "fatal":
+                        raise
+                    self.events.append(
+                        f"retry task={task.task_id} attempt={attempt}: {e}"
+                    )
                     worker = (worker + 1) % self.n_workers  # reschedule elsewhere
             else:
                 raise RuntimeError(f"task {task.task_id} exhausted retries")
@@ -147,3 +198,205 @@ class JobTracker:
         coadd = np.sum([r.coadd for r in results], axis=0)
         depth = np.sum([r.depth for r in results], axis=0)
         return coadd, depth
+
+
+# ----- streaming window fault domain (DESIGN.md §8) -----
+@dataclasses.dataclass
+class FaultCounters:
+    """Per-query fault accounting, threaded into JobStats by the engine."""
+
+    retries: int = 0              # failed attempts that were re-executed
+    speculative_windows: int = 0  # straggler backups launched (and verified)
+    quarantined_packs: int = 0    # packs gated out after persistent poison
+    resumed_windows: int = 0      # journal hits replayed instead of re-run
+
+
+def _block(parts):
+    """Host-block on a partial tuple (speculation needs wall-clock truth)."""
+    import jax
+
+    return jax.block_until_ready(parts)
+
+
+class WindowTracker:
+    """Runs a window schedule as idempotent, journaled, retryable tasks.
+
+    The streaming executors hand every `ScanWindow` through here (when
+    ``on_fault != "raise"``); the tracker owns the fault policy, the engine
+    owns the device work via two callbacks:
+
+    * ``acquire(win, quarantined) -> operands`` — make the window's chunk
+      resident (the upload seam; raises on injected/real upload failures and
+      on poison detection);
+    * ``dispatch(operands, win, quarantined) -> partials`` — issue the
+      window's jitted scan (async; the partial tuple stays on device).
+
+    Clean-path cost is one dict lookup + one journal insert per window: no
+    digests, no syncs, no timing — the one-sync-at-reduce-time contract
+    (DESIGN.md §6) and the ≤1.1× BENCH overhead gate both survive.  Enabling
+    speculation (``straggler_factor``) is the documented exception: timing a
+    window means blocking on it, so wall clock degrades to sum-of-windows in
+    exchange for straggler detection.
+    """
+
+    def __init__(
+        self,
+        policy: str = "retry",
+        max_attempts: int = 3,
+        backoff_s: float = 0.05,
+        backoff_cap_s: float = 2.0,
+        straggler_factor: Optional[float] = None,
+        straggler_min_windows: int = 2,
+        injector=None,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        if policy not in ("retry", "quarantine", "raise"):
+            raise ValueError(
+                f"policy must be 'retry', 'quarantine', or 'raise'; got {policy!r}"
+            )
+        if max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
+        self.policy = policy
+        self.max_attempts = max_attempts
+        self.backoff_s = backoff_s
+        self.backoff_cap_s = backoff_cap_s
+        self.straggler_factor = straggler_factor
+        self.straggler_min_windows = straggler_min_windows
+        self.injector = injector
+        self._sleep = sleep
+        self.counters = FaultCounters()
+        self.events: List[str] = []
+        self.durations: List[float] = []
+        self.quarantined: Set[int] = set()
+
+    def _backoff(self, attempt: int) -> None:
+        self._sleep(min(self.backoff_s * (2 ** (attempt - 1)), self.backoff_cap_s))
+
+    def run(self, windows, acquire, dispatch, journal: Dict) -> tuple:
+        """Execute ``windows``; return ``(partials, sorted quarantined packs)``.
+
+        ``journal`` maps ``win.key -> partial tuple`` and belongs to the
+        caller: completed windows are written through as they finish, so a
+        `QueryKilled` (or any fatal error) leaves every finished window
+        journaled — a rerun with the same journal replays only the missing
+        ones (``resumed_windows`` counts the hits).
+        """
+        acc = None
+        prefetched: Dict = {}
+        for i, win in enumerate(windows):
+            key = win.key
+            if key in journal:
+                part = journal[key]
+                self.counters.resumed_windows += 1
+                self.events.append(f"journal-hit window={key}")
+            else:
+                part = self._run_window(
+                    win, acquire, dispatch, prefetched.pop(key, None)
+                )
+                journal[key] = part
+                if self.injector is not None:
+                    # After journaling: an injected kill loses no finished work.
+                    self.injector.on_window_complete(win)
+            acc = part if acc is None else tuple(
+                a + b for a, b in zip(acc, part)
+            )
+            if i + 1 < len(windows) and windows[i + 1].key not in journal:
+                nxt = windows[i + 1]
+                try:
+                    # Double buffer: the next chunk's async upload rides
+                    # behind this window's in-flight scan; the operands are
+                    # carried so the window doesn't re-acquire.
+                    prefetched[nxt.key] = acquire(
+                        nxt, frozenset(self.quarantined)
+                    )
+                except Exception as e:
+                    # The prefetch is opportunistic: surface the failure when
+                    # the window itself runs (fatal errors re-raise there
+                    # too).  The consumed attempt still counts as a retry.
+                    if classify(e) == "transient":
+                        self.counters.retries += 1
+                    self.events.append(f"prefetch-fault window={nxt.key}: {e}")
+        return acc, sorted(self.quarantined)
+
+    def _run_window(self, win, acquire, dispatch, ops=None):
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                if ops is None:
+                    ops = acquire(win, frozenset(self.quarantined))
+                t0 = time.perf_counter()
+                if self.injector is not None:
+                    self.injector.on_window_execute(win)  # straggler seam
+                part = dispatch(ops, win, frozenset(self.quarantined))
+                if self.straggler_factor is not None:
+                    part = _block(part)
+                    dt = time.perf_counter() - t0
+                    self._maybe_speculate(win, ops, dispatch, part, dt)
+                    self.durations.append(dt)
+                return part
+            except QueryKilled:
+                raise
+            except PoisonedChunkError as e:
+                ops = None  # re-acquire: the staged chunk was rejected
+                self.counters.retries += 1
+                self.events.append(
+                    f"poison window={win.key} attempt={attempt}: {e}"
+                )
+                if attempt < self.max_attempts:
+                    self._backoff(attempt)
+                    continue
+                if self.policy == "quarantine":
+                    fresh = set(e.packs) - self.quarantined
+                    if not fresh:
+                        # Quarantining can't make progress: the chunk fails
+                        # verification on packs already gated out.
+                        raise
+                    self.quarantined |= fresh
+                    self.counters.quarantined_packs += len(fresh)
+                    self.events.append(f"quarantine packs={sorted(fresh)}")
+                    attempt = 0  # the sanitized chunk gets fresh attempts
+                    continue
+                raise
+            except Exception as e:
+                if classify(e) == "fatal":
+                    raise
+                ops = None  # re-acquire on retry (a hit if the chunk landed)
+                self.counters.retries += 1
+                self.events.append(
+                    f"retry window={win.key} attempt={attempt}: {e}"
+                )
+                if attempt >= self.max_attempts:
+                    raise
+                self._backoff(attempt)
+
+    def _maybe_speculate(self, win, ops, dispatch, part, dt: float) -> None:
+        if len(self.durations) < self.straggler_min_windows:
+            return
+        median = statistics.median(self.durations)
+        if median <= 0 or dt <= self.straggler_factor * median:
+            return
+        # Straggler: launch a backup execution of the same window.  First
+        # result wins (the primary already finished); the backup exists to
+        # prove the task is re-executable — digests must agree.
+        self.counters.speculative_windows += 1
+        self.events.append(
+            f"speculative window={win.key} dt={dt:.4f}s median={median:.4f}s"
+        )
+        backup = _block(dispatch(ops, win, frozenset(self.quarantined)))
+        d0, d1 = partial_digest(part), partial_digest(backup)
+        if d0 != d1:
+            raise DeterminismError(
+                f"window {win.key}: primary digest {d0} != backup {d1}"
+            )
+
+
+__all__ = [
+    "FailureInjector",
+    "FaultCounters",
+    "JobTracker",
+    "MapTask",
+    "TaskResult",
+    "WindowTracker",
+    "partial_digest",
+]

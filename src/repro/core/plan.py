@@ -140,6 +140,18 @@ class ScanWindow:
     n_gated: int
     budget: int            # static bucket == len(pack_idx)
 
+    @property
+    def key(self) -> Tuple[int, int, int, int]:
+        """Journal identity of this window *within one query's schedule*.
+
+        The fault tracker (DESIGN.md §8) journals completed window partials
+        under this key; it is unique within a schedule because windows
+        partition the pack range.  Cross-query identity comes from the
+        engine's job key (a digest over gate/qvec/schedule), never from
+        this tuple alone.
+        """
+        return (self.start, self.stop, self.n_gated, self.budget)
+
 
 def window_schedule(
     gated: np.ndarray, n_packs: int, chunk_packs: int

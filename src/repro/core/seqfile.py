@@ -23,8 +23,9 @@ index the paper's SQL method uses to build file splits (§4.1.4).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import OrderedDict
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple
 
 import numpy as np
 
@@ -148,6 +149,11 @@ class ResidencyManager:
         self.derived_builds = 0 # device-computed entries built (no H2D)
         self.derived_bytes = 0  # cumulative bytes of derived builds
         self.peak_bytes = 0     # true peak residency (see class docstring)
+        self.failed_builds = 0  # builds that raised (no entry inserted)
+        # Upload failure seam (DESIGN.md §8): called with the entry key on
+        # every miss, right where a real transfer would be issued — chaos
+        # drills hook `ChaosInjector.on_upload` here.  May raise.
+        self.fault_hook: Optional[Callable[[Tuple], None]] = None
         self._last_key: Optional[Tuple] = None  # most recently served entry
 
     @property
@@ -193,7 +199,18 @@ class ResidencyManager:
                     # The entry a consumer may still be scanning: its
                     # buffers outlive the eviction until that scan retires.
                     in_flight = evicted.nbytes
-        payload = build()
+        try:
+            if self.fault_hook is not None:
+                self.fault_hook(key)
+            payload = build()
+        except BaseException:
+            # Failed-build contract: no entry is inserted and no upload is
+            # counted, so a retry re-acquires cleanly.  Evictions already
+            # performed stand — the newcomer's room was made, the newcomer
+            # never arrived — which keeps the LRU consistent (budget is an
+            # upper bound, never violated by a failure).
+            self.failed_builds += 1
+            raise
         self._lru[key] = ResidentEntry(key, payload, nbytes)
         if h2d:
             self.uploads += 1
@@ -307,24 +324,81 @@ class PackedDataset:
             floats={k: jnp.asarray(v) for k, v in self.floats.items()},
         )
 
-    def to_device_chunk(self, start: int, stop: int) -> DevicePackedDataset:
+    def to_device_chunk(
+        self, start: int, stop: int, pixels: Optional[np.ndarray] = None
+    ) -> DevicePackedDataset:
         """Upload the pack-range [start, stop) as its own resident chunk.
 
         The `jax.device_put` calls are asynchronous: the host returns as
         soon as the transfers are enqueued, so a chunk uploaded while the
         device scans the previous one overlaps H2D with compute — the
         double-buffering the streaming executor relies on (DESIGN.md §6).
+
+        ``pixels`` overrides the staged pixel slice — the fault-tolerant
+        build path (DESIGN.md §8) stages, verifies, and possibly sanitizes
+        a host copy (quarantined pack rows zeroed) before the upload.
         """
         import jax  # deferred: packing itself is jax-free
 
         sl = slice(start, stop)
         put = jax.device_put
         return DevicePackedDataset(
-            pixels=put(self.pixels[sl]),
+            pixels=put(self.pixels[sl] if pixels is None else pixels),
             wcs=put(self.wcs[sl]),
             ints={k: put(v[sl]) for k, v in self.ints.items()},
             floats={k: put(v[sl]) for k, v in self.floats.items()},
         )
+
+    # ----- chunk verification (DESIGN.md §8) -----
+    def pack_digests(self) -> List[bytes]:
+        """Per-pack content digests of the *host* pixels (the ground truth).
+
+        Built lazily on first use and cached: the host seqfile is immutable
+        once packed, so these digests are what a staged chunk must reproduce
+        for `verify_chunk`'s corruption check.
+        """
+        cache = getattr(self, "_pack_digest_cache", None)
+        if cache is None:
+            cache = [
+                hashlib.sha256(
+                    np.ascontiguousarray(self.pixels[p]).tobytes()
+                ).digest()
+                for p in range(self.n_packs)
+            ]
+            self._pack_digest_cache = cache
+        return cache
+
+    def verify_chunk(
+        self,
+        start: int,
+        stop: int,
+        pixels: np.ndarray,
+        skip: FrozenSet[int] = frozenset(),
+        check_digests: bool = False,
+    ) -> List[int]:
+        """Global pack indices in [start, stop) whose staged pixels are bad.
+
+        Poison detection for the fault-tolerant build path: a pack fails on
+        non-finite values (NaN/Inf — the cheap scan, always on) or, with
+        ``check_digests``, on a content digest mismatch against the host
+        seqfile (catches finite corruption too, at sha256 cost per build).
+        ``skip`` holds already-quarantined packs, whose rows are about to be
+        sanitized and must not re-trip detection.
+        """
+        bad: List[int] = []
+        for local in range(stop - start):
+            g = start + local
+            if g in skip:
+                continue
+            row = pixels[local]
+            if not np.isfinite(row).all():
+                bad.append(g)
+                continue
+            if check_digests:
+                d = hashlib.sha256(np.ascontiguousarray(row).tobytes()).digest()
+                if d != self.pack_digests()[g]:
+                    bad.append(g)
+        return bad
 
     def pack_nbytes(self) -> int:
         """Host bytes of ONE pack (pixels + wcs + metadata columns)."""

@@ -79,3 +79,25 @@ def test_elastic_repartition_same_result():
         c, d = t.run(JobTracker.split(IDS, n_tasks))
         np.testing.assert_allclose(c, ref_c, atol=1e-3)
         np.testing.assert_array_equal(d, ref_d)
+
+
+def test_non_runtime_transient_errors_are_retried():
+    """The retry-net fix: transient failures of ANY classified type (not
+    just RuntimeError) consume a retry and re-execute to the same result."""
+    ref_c, ref_d = reference()
+    inj = FailureInjector({(0, 0): "fail_os", (1, 0): "fail_transient"})
+    t = JobTracker(executor, n_workers=4, injector=inj)
+    c, d = t.run(JobTracker.split(IDS, 4))
+    np.testing.assert_allclose(c, ref_c, atol=1e-4)
+    np.testing.assert_array_equal(d, ref_d)
+    assert sum("retry" in e for e in t.events) == 2
+
+
+def test_fatal_errors_escape_the_retry_net():
+    """Fatal errors (ValueError here; DeterminismError in production) must
+    escape immediately — re-rolling them is wrong."""
+    inj = FailureInjector({(0, 0): "fail_fatal"})
+    t = JobTracker(executor, n_workers=4, injector=inj)
+    with pytest.raises(ValueError):
+        t.run(JobTracker.split(IDS, 4))
+    assert not any("retry" in e for e in t.events)

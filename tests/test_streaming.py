@@ -149,13 +149,30 @@ def test_streaming_batch_matches_eager(survey):
 
 
 def test_streaming_empty_gate(survey):
+    """Empty selections answer zeros with NO window schedule at all: no
+    upload, no dispatch, and no window-stat reduction over an empty list
+    (the max()-over-budgets guard)."""
     stream = _budgeted(survey, frac=4)
     far = CoaddQuery(band="r", ra_bounds=(200.0, 201.0),
                      dec_bounds=(50.0, 51.0), npix=32)
     r = stream.run(far, "sql_structured")
     assert np.all(r.coadd == 0) and np.all(r.depth == 0)
     assert not np.isnan(r.normalized).any()
-    assert r.stats.windows == 1 and r.stats.scan_budget == 1
+    assert r.stats.windows == 0 and r.stats.scan_budget == 0
+    assert r.stats.dispatches == 0 and r.stats.chunk_uploads == 0
+    assert r.stats.files_considered == 0
+
+
+def test_streaming_empty_gate_batch(survey):
+    """The batched streaming executor keeps the same empty-union contract."""
+    stream = _budgeted(survey, frac=4)
+    far = CoaddQuery(band="r", ra_bounds=(200.0, 201.0),
+                     dec_bounds=(50.0, 51.0), npix=32)
+    results = stream.run_batch([far, far], "sql_structured")
+    for r in results:
+        assert np.all(r.coadd == 0) and np.all(r.depth == 0)
+        assert r.stats.windows == 0 and r.stats.dispatches == 0
+        assert r.stats.chunk_uploads == 0
 
 
 # ----- eviction correctness -------------------------------------------------
