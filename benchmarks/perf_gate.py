@@ -16,7 +16,10 @@ Independently of any baseline, the fault-tracker clean-path overhead row
 (``fault_overhead`` in the report) is gated absolutely at
 ``--fault-threshold`` (default 1.1x): the WindowTracker must not cost more
 than 10% over the untracked streaming loop, and its result must be bitwise
-identical.
+identical.  Likewise the brick rows (``bricks`` in the report) are gated
+absolutely at ``--brick-threshold`` (default 3.0x): warm brick-served
+queries must beat the brick-free fresh scan by at least that factor, with
+bitwise-identical results.
 
   python -m benchmarks.perf_gate --current BENCH_coadd.json \
       [--baseline path.json] [--history old_trajectory.jsonl] \
@@ -102,6 +105,41 @@ def fault_overhead_gate(current: Dict, threshold: float) -> Tuple[List[str], Lis
     return regressions, lines
 
 
+def brick_gate(current: Dict, threshold: float) -> Tuple[List[str], List[str]]:
+    """Absolute gate on brick-served query speedup (DESIGN.md §9).
+
+    Warm brick mosaics and fresh lattice-window scans ran side by side in
+    the same --quick invocation, so no baseline artifact is needed: every
+    prefiltered-method row must serve cached at >= ``threshold`` x faster
+    than cold, and every row (any method) must agree bitwise — the cache
+    trades time for storage, never arithmetic.
+    """
+    rec = current.get("bricks")
+    if not rec or not rec.get("rows"):
+        return [], ["  bricks: no rows (old artifact?)"]
+    regressions: List[str] = []
+    lines: List[str] = []
+    for row in rec["rows"]:
+        name = f"bricks/{row['method']}/k{row['k']}"
+        speedup = float(row["speedup"])
+        lines.append(
+            f"  {name}: cached {row['us_per_query_cached']:.0f} vs cold "
+            f"{row['us_per_query_cold']:.0f} us/query "
+            f"({speedup:.2f}x, gate >= {threshold:.2f}x)"
+        )
+        if speedup < threshold:
+            regressions.append(
+                f"{name}: warm brick serve only {speedup:.2f}x over the "
+                f"brick-free scan (< {threshold:.2f}x)"
+            )
+        if not row.get("bitwise_equal", True):
+            regressions.append(
+                f"{name}: mosaicked result differs from the fresh scan "
+                "(brick serving must never change arithmetic)"
+            )
+    return regressions, lines
+
+
 def trajectory_row(current: Dict, sha: str, ref: str) -> Dict:
     """One compact history row: us/image per row + the streaming headline."""
     row = {
@@ -115,6 +153,12 @@ def trajectory_row(current: Dict, sha: str, ref: str) -> Dict:
     fo = current.get("fault_overhead")
     if fo:
         row["fault_overhead_ratio"] = fo.get("overhead_ratio")
+    bricks = current.get("bricks")
+    if bricks and bricks.get("rows"):
+        row["brick_speedups"] = {
+            f"{r['method']}/k{r['k']}": r.get("speedup")
+            for r in bricks["rows"]
+        }
     streaming = current.get("streaming")
     if streaming:
         row["streaming"] = {
@@ -137,6 +181,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--fault-threshold", type=float, default=1.1,
                     help="absolute ceiling on the WindowTracker clean-path "
                          "overhead ratio (tracker-on vs tracker-off)")
+    ap.add_argument("--brick-threshold", type=float, default=3.0,
+                    help="absolute floor on warm brick-served speedup vs "
+                         "the brick-free fresh scan")
     ap.add_argument("--history", default=None,
                     help="base-branch BENCH_trajectory.jsonl to extend")
     ap.add_argument("--trajectory", default="BENCH_trajectory.jsonl")
@@ -165,6 +212,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     print("perf-gate: fault-tracker clean-path overhead:")
     print("\n".join(fault_lines))
     regressions += fault_regressions
+
+    brick_regressions, brick_lines = brick_gate(current, args.brick_threshold)
+    print("perf-gate: brick-served warm vs cold:")
+    print("\n".join(brick_lines))
+    regressions += brick_regressions
 
     # Extend the trajectory: base history (if any) + this run's row.
     if args.history and os.path.exists(args.history) \

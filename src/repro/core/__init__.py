@@ -5,6 +5,7 @@ Public API:
   SpatialIndex, JobTracker, WindowTracker, ChaosInjector.
 """
 
+from repro.core.bricks import BrickCover, BrickGrid
 from repro.core.engine import METHODS, CoaddEngine, CoaddResult, JobStats
 from repro.core.faults import (
     ChaosInjector,
@@ -19,10 +20,12 @@ from repro.core.faults import (
     classify,
 )
 from repro.core.jobtracker import (
+    BrickTask,
     FailureInjector,
     FaultCounters,
     JobTracker,
     MapTask,
+    MaterializeReport,
     WindowTracker,
 )
 from repro.core.plan import (
@@ -34,13 +37,18 @@ from repro.core.plan import (
     stack_plans,
     window_schedule,
 )
-from repro.core.seqfile import ResidencyManager
+from repro.core.seqfile import BrickMeta, BrickStore, ResidencyManager
 from repro.core.prefilter import SpatialIndex
 from repro.core.query import BANDS, CoaddQuery
 from repro.core.survey import Survey, SurveyConfig, make_survey
 
 __all__ = [
     "BANDS",
+    "BrickCover",
+    "BrickGrid",
+    "BrickMeta",
+    "BrickStore",
+    "BrickTask",
     "ChaosInjector",
     "CoaddEngine",
     "CoaddPlan",
@@ -55,6 +63,7 @@ __all__ = [
     "JobStats",
     "JobTracker",
     "MapTask",
+    "MaterializeReport",
     "METHODS",
     "PoisonSpec",
     "PoisonedChunkError",

@@ -73,8 +73,15 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import mapper, psf, reducer
+from repro.core.bricks import BrickCover, BrickGrid
 from repro.core.faults import ChaosInjector, PoisonedChunkError
-from repro.core.jobtracker import FaultCounters, WindowTracker
+from repro.core.jobtracker import (
+    BrickTask,
+    FaultCounters,
+    MaterializeReport,
+    MaterializeTracker,
+    WindowTracker,
+)
 from repro.core.plan import (
     CoaddPlan,
     ScanWindow,
@@ -96,6 +103,10 @@ from repro.core.prefilter import (
 )
 from repro.core.query import CoaddQuery
 from repro.core.seqfile import (
+    COST_MATCHED_CHUNK,
+    COST_RAW_CHUNK,
+    BrickMeta,
+    BrickStore,
     DevicePackedDataset,
     MeshResidentDataset,
     PackedDataset,
@@ -180,6 +191,18 @@ class JobStats:
     resumed_windows: int = 0       # journal hits replayed instead of re-run
     partial: bool = False          # True when quarantine removed coverage
     uncovered_packs: Tuple[int, ...] = ()  # exec-layout packs quarantined out
+    # Brick-serving accounting (DESIGN.md §9) — how `run(use_bricks=True)`
+    # covered this query.  All additive (a mosaic is one result); zero on
+    # every brick-free path.  ``bricks_hit`` counts tiles served from the
+    # device tier, ``bricks_spilled`` tiles re-uploaded from the host tier
+    # after LRU pressure dropped their device replica, ``bricks_missed``
+    # tiles that had to be freshly materialized inline, and
+    # ``residual_packs_scanned`` the streaming scan work those misses paid
+    # (the warm path's number is 0 — that gap is the whole point).
+    bricks_hit: int = 0
+    bricks_missed: int = 0
+    bricks_spilled: int = 0
+    residual_packs_scanned: int = 0
 
 
 @dataclasses.dataclass
@@ -403,6 +426,23 @@ def _match_packs(pixels, kernels):
     )
 
 
+@partial(jax.jit, static_argnames=("npix", "use_kernel", "interpret"))
+def _mosaic_bricks(tiles, covs, offsets, npix, use_kernel=False,
+                   interpret=True):
+    """Merge cached brick tiles into one (npix, npix) mosaic (DESIGN.md §9).
+
+    One jitted dispatch over (B, b, b) device-resident brick coadds +
+    weight maps and their (B, 2) output offsets.  The XLA scan and the
+    Pallas kernel accumulate into a zero canvas in the same brick order,
+    so both match the fresh lattice-window scan bitwise.
+    """
+    if use_kernel:
+        return warp_ops.mosaic_bricks(
+            tiles, covs, offsets, npix, interpret=interpret
+        )
+    return reducer.mosaic_tiles(tiles, covs, offsets, npix)
+
+
 def _sync(x):
     """The streaming executors' ONE host sync, at reduce time (DESIGN.md §6).
 
@@ -446,6 +486,8 @@ class CoaddEngine:
         straggler_factor: Optional[float] = None,
         verify_digests: bool = False,
         fault_injector: Optional[ChaosInjector] = None,
+        brick_deg: float = 0.25,
+        brick_npix: int = 64,
     ):
         self.survey = survey
         self.use_kernel = use_kernel
@@ -522,6 +564,14 @@ class CoaddEngine:
         self.mesh_upload_count = 0   # host->mesh uploads of whole layouts
         self.dispatch_count = 0      # jitted device dispatches issued
         self.matched_builds = 0      # device-side matched-pixel constructions
+        # Brick tessellation (DESIGN.md §9): the materialized-coadd tier.
+        # The grid is built lazily from the survey footprint; the store
+        # shares the engine's ResidencyManager so brick tiles compete with
+        # streaming chunks under one device budget (at COST_BRICK priority).
+        self.brick_deg = brick_deg
+        self.brick_npix = brick_npix
+        self._brick_grid: Optional[BrickGrid] = None
+        self.brick_store = BrickStore(self.residency)
 
     # ----- dataset layouts (built lazily, cached) -----
     def dataset(self, layout: str) -> PackedDataset:
@@ -702,7 +752,8 @@ class CoaddEngine:
             )
 
         payload = self.residency.acquire(
-            key, int(dev.pixels.nbytes), build, h2d=False
+            key, int(dev.pixels.nbytes), build, h2d=False,
+            cost=COST_MATCHED_CHUNK,
         )
         return payload, self.residency.hits - hits0
 
@@ -838,13 +889,37 @@ class CoaddEngine:
             if matched else 0
         )
         return self.residency.acquire(
-            key, nbytes, build, transient_bytes=transient
+            key, nbytes, build, transient_bytes=transient,
+            cost=COST_MATCHED_CHUNK if matched else COST_RAW_CHUNK,
         )
 
     # ----- shared helpers -----
     def _grids(self, query: CoaddQuery):
         gr, gd = mapper.query_grid_sky(query)
         return jnp.asarray(gr), jnp.asarray(gd)
+
+    def _plan_grids(self, plan: CoaddPlan):
+        """The plan's output grid: its `grid_sky` override (brick-lattice
+        plans, §9) when present, the query's own TAN grid otherwise."""
+        if plan.grid_sky is not None:
+            gr, gd = plan.grid_sky
+            return jnp.asarray(gr), jnp.asarray(gd)
+        return self._grids(plan.query)
+
+    @staticmethod
+    def _grid_tag(plan: CoaddPlan) -> str:
+        """Journal-identity tag of a plan's grid override (empty = default).
+
+        `_job_key` must distinguish a lattice-window scan from the plain
+        query-grid scan of the same bounds: their window partials differ
+        bitwise, so replaying one journal into the other would be wrong.
+        """
+        if plan.grid_sky is None:
+            return ""
+        h = hashlib.sha256()
+        for g in plan.grid_sky:
+            h.update(np.ascontiguousarray(g, np.float32).tobytes())
+        return h.hexdigest()[:16]
 
     def _block_rows(self, query: CoaddQuery, ds: PackedDataset) -> int:
         if self.block_rows is not None:
@@ -953,7 +1028,7 @@ class CoaddEngine:
 
     def _job_key(self, method: str, layout: str, gates: np.ndarray,
                  qvecs: np.ndarray, npix: int,
-                 windows: List[ScanWindow]) -> str:
+                 windows: List[ScanWindow], grid_tag: str = "") -> str:
         """Cross-query identity of a streaming job's window journal (§8).
 
         A digest over everything that determines a window partial's value —
@@ -963,7 +1038,7 @@ class CoaddEngine:
         """
         h = hashlib.sha256()
         h.update(
-            f"{method}|{layout}|{npix}|{self._psf_state()}".encode()
+            f"{method}|{layout}|{npix}|{self._psf_state()}|{grid_tag}".encode()
         )
         h.update(np.ascontiguousarray(gates).tobytes())
         h.update(np.ascontiguousarray(qvecs, np.float32).tobytes())
@@ -1093,7 +1168,7 @@ class CoaddEngine:
             # schedule at all — no upload, no dispatch, and no window-stat
             # reduction over an empty list.
             return self._empty_streaming_result(plan)
-        grid_ra, grid_dec = self._grids(plan.query)
+        grid_ra, grid_dec = self._plan_grids(plan)
         block_rows = self._block_rows(plan.query, ds)
         windows = self._stream_windows(exec_ds, gate.any(axis=1))
         qvec = jnp.asarray(plan.qvec)
@@ -1125,7 +1200,8 @@ class CoaddEngine:
             )
 
         job_key = self._job_key(plan.method, plan.layout, gate, plan.qvec,
-                                plan.query.npix, windows)
+                                plan.query.npix, windows,
+                                grid_tag=self._grid_tag(plan))
         (coadd, depth, contrib, considered), counters, elapsed, fc, quar = \
             self._run_stream_windows(plan.layout, exec_ds, windows, dispatch,
                                      job_key)
@@ -1178,7 +1254,7 @@ class CoaddEngine:
         exec_ds, _ = self.exec_dataset(plan.layout)
         dev = self.device_dataset(plan.layout)
         gate = self._exec_gate(plan)
-        grid_ra, grid_dec = self._grids(plan.query)
+        grid_ra, grid_dec = self._plan_grids(plan)
         block_rows = self._block_rows(plan.query, ds)
         psf_kernels = self._device_psf_kernels(plan.layout)
         m_builds0, m_hits = self.matched_builds, 0
@@ -1275,8 +1351,243 @@ class CoaddEngine:
                 "engine that will execute"
             )
 
-    def run(self, query: CoaddQuery, method: str) -> CoaddResult:
+    def run(self, query: CoaddQuery, method: str,
+            use_bricks: bool = False) -> CoaddResult:
+        """Plan + execute one query.
+
+        With ``use_bricks=True`` (DESIGN.md §9) a brick-aligned query is
+        served by mosaicking cached brick coadds — materializing any
+        missing bricks inline — and an unaligned query falls back to the
+        ordinary path transparently (its stats carry zero brick counters).
+        """
+        if use_bricks:
+            res = self._run_bricks(query, method)
+            if res is not None:
+                return res
         return self.execute(self.plan(query, method))
+
+    # ----- brick-tessellated materialized coadds (DESIGN.md §9) -----
+    @property
+    def brick_grid(self) -> BrickGrid:
+        """The survey's brick tessellation (built lazily, fixed per engine)."""
+        if self._brick_grid is None:
+            self._brick_grid = BrickGrid.for_survey(
+                self.survey.config, self.brick_deg, self.brick_npix
+            )
+        return self._brick_grid
+
+    def _brick_key(self, band: str, row: int, col: int) -> Tuple:
+        """BrickStore identity of one materialized (brick, band) cell.
+
+        Carries `_psf_state()` so a retuned engine misses and
+        re-materializes instead of mosaicking tiles homogenized to a
+        different target — staleness by key, the same contract as every
+        other derived-residency cache.
+        """
+        return ("brick", band, row, col, self._psf_state())
+
+    def _brick_plan(self, band: str, row: int, col: int,
+                    method: str) -> CoaddPlan:
+        """The materialization plan for one brick: a normal planned query
+        whose output grid is overridden onto the global lattice tile."""
+        plan = self.plan(self.brick_grid.brick_query(row, col, band), method)
+        plan.grid_sky = self.brick_grid.brick_sky(row, col)
+        return plan
+
+    def run_window(self, query: CoaddQuery, method: str) -> CoaddResult:
+        """The brick-free baseline for a brick-aligned query: one fresh
+        scan onto the lattice-window grid.  This is the path
+        `run(use_bricks=True)` must match bitwise — same lattice pixels,
+        same gate semantics, no bricks consulted.  Raises on queries that
+        do not decompose (use plain `run` for those)."""
+        cover = self.brick_grid.decompose(query)
+        if cover is None:
+            raise ValueError(
+                "query is not brick-aligned; run_window only serves "
+                "lattice-window queries (see BrickGrid.window_query)"
+            )
+        plan = self.plan(query, method)
+        plan.grid_sky = self.brick_grid.window_sky(
+            cover.r0, cover.r1, cover.c0, cover.c1
+        )
+        return self.execute(plan)
+
+    def _run_bricks(self, query: CoaddQuery,
+                    method: str) -> Optional[CoaddResult]:
+        """Serve a brick-aligned query from the BrickStore, or None.
+
+        Decomposes the query into its brick cover, fetches every covered
+        tile (device tier preferred, host-spill re-upload otherwise),
+        freshly materializes the misses inline — each a normal `execute`
+        under the full §8 fault domain, stored for the next query — and
+        merges the tiles with one jitted weighted-sum mosaic dispatch.
+        """
+        cover = self.brick_grid.decompose(query)
+        if cover is None:
+            return None
+        t0 = time.perf_counter()
+        store = self.brick_store
+        b = self.brick_npix
+        d0 = self.dispatch_count
+        hits = spills = 0
+        tiles: List = []
+        covs: List = []
+        offsets: List[Tuple[int, int]] = []
+        metas: List[Optional[BrickMeta]] = []
+        missing: List[int] = []
+        for i, (r, c) in enumerate(cover.bricks):
+            offsets.append(((r - cover.r0) * b, (c - cover.c0) * b))
+            got = store.fetch(self._brick_key(query.band, r, c))
+            if got is None:
+                missing.append(i)
+                tiles.append(None)
+                covs.append(None)
+                metas.append(None)
+                continue
+            coadd_dev, depth_dev, meta, tier = got
+            if tier == "device":
+                hits += 1
+            else:
+                spills += 1
+            tiles.append(coadd_dev)
+            covs.append(depth_dev)
+            metas.append(meta)
+        t_fetch = time.perf_counter() - t0
+        # The residual: bricks nobody materialized yet.  Each miss pays one
+        # fresh streaming scan now and is cached for every query after.
+        residual = JobStats("", 0, 0, 0, 0.0, 0.0, 0.0, dispatches=0)
+        for i in missing:
+            r, c = cover.bricks[i]
+            res = self.execute(self._brick_plan(query.band, r, c, method))
+            meta = BrickMeta(
+                partial=res.stats.partial,
+                uncovered_packs=res.stats.uncovered_packs,
+                files_considered=res.stats.files_considered,
+                files_contributing=res.stats.files_contributing,
+            )
+            coadd_dev, depth_dev = store.put(
+                self._brick_key(query.band, r, c), res.coadd, res.depth, meta
+            )
+            tiles[i] = coadd_dev
+            covs[i] = depth_dev
+            metas[i] = meta
+            s = res.stats
+            residual.t_locate_s += s.t_locate_s
+            residual.t_map_reduce_s += s.t_map_reduce_s
+            residual.packs_touched += s.packs_touched
+            residual.packs_gated += s.packs_gated
+            residual.packs_scanned += s.packs_scanned
+            residual.scan_budget = max(residual.scan_budget, s.scan_budget)
+            residual.windows += s.windows
+            residual.chunk_uploads += s.chunk_uploads
+            residual.residency_hits += s.residency_hits
+            residual.residency_evictions += s.residency_evictions
+            residual.matched_cache_builds += s.matched_cache_builds
+            residual.matched_cache_hits += s.matched_cache_hits
+            residual.retries += s.retries
+            residual.speculative_windows += s.speculative_windows
+            residual.quarantined_packs += s.quarantined_packs
+            residual.resumed_windows += s.resumed_windows
+        t1 = time.perf_counter()
+        self.dispatch_count += 1
+        coadd, depth = _mosaic_bricks(
+            jnp.stack(tiles),
+            jnp.stack(covs),
+            jnp.asarray(np.array(offsets, np.int32)),
+            query.npix,
+            use_kernel=self.use_kernel,
+            interpret=self.kernel_interpret,
+        )
+        coadd.block_until_ready()
+        t2 = time.perf_counter()
+        uncovered = sorted(
+            {p for m in metas for p in m.uncovered_packs}
+        )
+        stats = JobStats(
+            method=method,
+            files_considered=sum(m.files_considered for m in metas),
+            files_contributing=sum(m.files_contributing for m in metas),
+            packs_touched=residual.packs_touched,
+            t_locate_s=t_fetch + residual.t_locate_s,
+            t_map_reduce_s=residual.t_map_reduce_s + (t2 - t1),
+            t_total_s=(t2 - t0),
+            dispatches=self.dispatch_count - d0,
+            packs_gated=residual.packs_gated,
+            packs_scanned=residual.packs_scanned,
+            scan_budget=residual.scan_budget,
+            windows=residual.windows,
+            chunk_uploads=residual.chunk_uploads,
+            residency_hits=residual.residency_hits,
+            residency_evictions=residual.residency_evictions,
+            matched_cache_builds=residual.matched_cache_builds,
+            matched_cache_hits=residual.matched_cache_hits,
+            peak_resident_bytes=self._peak_resident_bytes(),
+            retries=residual.retries,
+            speculative_windows=residual.speculative_windows,
+            quarantined_packs=residual.quarantined_packs,
+            resumed_windows=residual.resumed_windows,
+            partial=any(m.partial for m in metas),
+            uncovered_packs=tuple(uncovered),
+            bricks_hit=hits,
+            bricks_missed=len(missing),
+            bricks_spilled=spills,
+            residual_packs_scanned=residual.packs_scanned,
+        )
+        return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
+
+    def materialize_bricks(
+        self,
+        bands: Sequence[str] = ("r",),
+        region: Optional[Tuple[Tuple[float, float], Tuple[float, float]]] = None,
+        method: str = "sql_structured",
+    ) -> MaterializeReport:
+        """Batch-materialize the (brick, band) lattice into the BrickStore.
+
+        Every cell is one normal planned+executed brick query driven
+        through the streaming executors under the §8 fault domain, then
+        journaled by its presence in the store: a killed job re-issued with
+        the same arguments skips finished bricks and resumes the in-flight
+        one from its window journal.  ``region=(ra_bounds, dec_bounds)``
+        restricts to intersecting cells; bricks already materialized (same
+        PSF state) are skipped.
+        """
+        grid = self.brick_grid
+        cells = grid.bricks(region)
+        tasks = [
+            BrickTask(band=band, row=r, col=c)
+            for band in bands for (r, c) in cells
+        ]
+        tracker = MaterializeTracker(
+            max_attempts=self.fault_max_attempts,
+            backoff_s=self.fault_backoff_s,
+        )
+
+        def is_done(task: BrickTask) -> bool:
+            return self.brick_store.contains(
+                self._brick_key(task.band, task.row, task.col)
+            )
+
+        def run_one(task: BrickTask) -> None:
+            res = self.execute(
+                self._brick_plan(task.band, task.row, task.col, method)
+            )
+            self.brick_store.put(
+                self._brick_key(task.band, task.row, task.col),
+                res.coadd,
+                res.depth,
+                BrickMeta(
+                    partial=res.stats.partial,
+                    uncovered_packs=res.stats.uncovered_packs,
+                    files_considered=res.stats.files_considered,
+                    files_contributing=res.stats.files_contributing,
+                ),
+            )
+            task.status = "partial" if res.stats.partial else "done"
+            task.packs_scanned = res.stats.packs_scanned
+            task.retries = res.stats.retries
+            task.resumed_windows = res.stats.resumed_windows
+
+        return MaterializeReport(tracker.run(tasks, is_done, run_one))
 
     # ----- batched multi-query jobs (paper Fig. 5) -----
     def run_batch(
@@ -1304,7 +1615,7 @@ class CoaddEngine:
         exec_ds, remap = self.exec_dataset(layout)
         if remap is not None:
             gates = np.stack([remap.apply(g) for g in gates])
-        grids = [self._grids(p.query) for p in plans]
+        grids = [self._plan_grids(p) for p in plans]
         grids_ra = jnp.stack([g[0] for g in grids])
         grids_dec = jnp.stack([g[1] for g in grids])
         block_rows = self._block_rows(plans[0].query, ds)
@@ -1427,8 +1738,11 @@ class CoaddEngine:
                 interpret=self.kernel_interpret,
             )
 
-        job_key = self._job_key("batch:" + plans[0].method, layout, gates,
-                                qvecs, plans[0].npix, windows)
+        job_key = self._job_key(
+            "batch:" + plans[0].method, layout, gates, qvecs, plans[0].npix,
+            windows,
+            grid_tag="|".join(self._grid_tag(p) for p in plans),
+        )
         (coadds, depths, contribs, considered), counters, elapsed, fc, quar = \
             self._run_stream_windows(layout, exec_ds, windows, dispatch,
                                      job_key)

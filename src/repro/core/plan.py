@@ -50,6 +50,12 @@ class CoaddPlan:
     # banks and the matched-pixel cache are keyed per target, so running a
     # stale plan on a retuned engine would silently stack mismatched PSFs.
     psf_target: Optional[float] = None
+    # Output-grid override (DESIGN.md §9): precomputed (ra, dec) float32
+    # sky coords, each (npix, npix), replacing the query's own TAN grid.
+    # Brick plans use this to put every brick (and brick window) on the one
+    # global lattice, which is what makes mosaicked and fresh scans agree
+    # bitwise; None (the default) keeps the per-query grid.
+    grid_sky: Optional[Tuple[np.ndarray, np.ndarray]] = None
 
     @property
     def npix(self) -> int:

@@ -27,6 +27,37 @@ def normalize(coadd: jnp.ndarray, depth: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(depth > 0, coadd / jnp.maximum(depth, 1e-6), 0.0)
 
 
+def mosaic_tiles(
+    tiles: jnp.ndarray,
+    covs: jnp.ndarray,
+    offsets: jnp.ndarray,
+    npix: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Weighted-sum merge of brick tiles into an (npix, npix) mosaic.
+
+    ``tiles``/``covs`` are (B, bh, bw) cached brick coadds + weight maps,
+    ``offsets`` (B, 2) int32 (row, col) output positions.  Accumulation into
+    a zero canvas is the same reduce monoid as `reduce_local` — bricks never
+    overlap, so add == write, but accumulating keeps the merge commutative
+    and bitwise-matches the Pallas variant (`kernels.warp.mosaic_bricks`).
+    """
+    coadd = jnp.zeros((npix, npix), tiles.dtype)
+    depth = jnp.zeros((npix, npix), covs.dtype)
+
+    def body(carry, op):
+        co, de = carry
+        tile, cov, off = op
+        r, c = off[0], off[1]
+        patch = jax.lax.dynamic_slice(co, (r, c), tile.shape) + tile
+        co = jax.lax.dynamic_update_slice(co, patch, (r, c))
+        dpatch = jax.lax.dynamic_slice(de, (r, c), cov.shape) + cov
+        de = jax.lax.dynamic_update_slice(de, dpatch, (r, c))
+        return (co, de), None
+
+    (coadd, depth), _ = jax.lax.scan(body, (coadd, depth), (tiles, covs, offsets))
+    return coadd, depth
+
+
 def reduce_collective(
     local_coadd: jnp.ndarray,
     local_depth: jnp.ndarray,

@@ -91,6 +91,15 @@ class MeshResidentDataset:
     n_flat: int                    # padded flat length M (static per cache key)
 
 
+# Rebuild-cost classes for cost-aware eviction (DESIGN.md §9).  The number
+# is a *class rank*, not a byte or second estimate: raw pixel chunks rebuild
+# with one H2D copy, matched-pixel chunks additionally re-run the PSF
+# convolution, and brick coadds rebuild only via a full streaming scan.
+COST_RAW_CHUNK = 1.0
+COST_MATCHED_CHUNK = 4.0
+COST_BRICK = 16.0
+
+
 @dataclasses.dataclass
 class ResidentEntry:
     """One LRU-tracked resident payload (a pack chunk or a mesh window)."""
@@ -98,6 +107,7 @@ class ResidentEntry:
     key: Tuple
     payload: Any
     nbytes: int
+    cost: float = COST_RAW_CHUNK  # rebuild-cost class (eviction priority)
 
 
 class ResidencyManager:
@@ -129,6 +139,13 @@ class ResidencyManager:
       traffic, so they get their own ``derived_builds``/``derived_bytes``
       counters and never inflate the upload accounting tests pin.
 
+    Eviction is **cost-aware** (DESIGN.md §9): every entry carries a
+    rebuild-cost class (``cost``), and pressure evicts the least-recently-
+    used entry of the *cheapest class present* — raw chunks (one H2D copy
+    to rebuild) go before matched-pixel chunks (H2D + convolution), which
+    go before bricks (a full streaming scan).  With uniform costs this
+    degrades exactly to plain LRU, which the PR-4 eviction-order tests pin.
+
     ``peak_bytes`` reports *true* peak residency, not the advisory budget:
     eviction is drop-the-reference, so a chunk evicted while the most
     recently served entry's scan is still in flight stays alive device-side
@@ -154,6 +171,12 @@ class ResidencyManager:
         # every miss, right where a real transfer would be issued — chaos
         # drills hook `ChaosInjector.on_upload` here.  May raise.
         self.fault_hook: Optional[Callable[[Tuple], None]] = None
+        # Eviction seam (DESIGN.md §9): called with (key, entry) after an
+        # entry is dropped under pressure — the `BrickStore` counts its
+        # device replicas spilling back to the host tier here.  Must not
+        # raise; exceptions are deliberately not swallowed (a broken hook
+        # is a bug, not weather).
+        self.on_evict: Optional[Callable[[Tuple, ResidentEntry], None]] = None
         self._last_key: Optional[Tuple] = None  # most recently served entry
 
     @property
@@ -171,6 +194,7 @@ class ResidencyManager:
         build: Callable[[], Any],
         h2d: bool = True,
         transient_bytes: int = 0,
+        cost: float = COST_RAW_CHUNK,
     ) -> Any:
         """Return the resident payload for ``key``, building on miss.
 
@@ -180,6 +204,8 @@ class ResidencyManager:
         alive beyond the entry (e.g. the raw pixel chunk a matched-pixel
         build convolves from, dropped once the convolution retires) — they
         join the peak candidate so the high-water mark stays honest.
+        ``cost`` is the entry's rebuild-cost class (see class docstring):
+        eviction pressure takes the LRU entry of the cheapest class first.
         """
         entry = self._lru.get(key)
         if entry is not None:
@@ -189,13 +215,21 @@ class ResidencyManager:
             return entry.payload
         in_flight = 0
         if self.budget_bytes is not None:
-            # Evict LRU-first until the newcomer fits.  A chunk larger than
-            # the whole budget still loads (the scan needs it); the budget
-            # is then transiently exceeded by that one chunk, never by two.
+            # Evict until the newcomer fits: cheapest rebuild-cost class
+            # first, LRU within the class (OrderedDict iteration order IS
+            # recency, oldest first, so the first minimum wins ties).  A
+            # chunk larger than the whole budget still loads (the scan
+            # needs it); the budget is then transiently exceeded by that
+            # one chunk, never by two.
             while self._lru and self.bytes_resident + nbytes > self.budget_bytes:
-                evicted_key, evicted = self._lru.popitem(last=False)
+                victim = min(
+                    self._lru, key=lambda k: self._lru[k].cost
+                )
+                evicted = self._lru.pop(victim)
                 self.evictions += 1
-                if evicted_key == self._last_key:
+                if self.on_evict is not None:
+                    self.on_evict(victim, evicted)
+                if victim == self._last_key:
                     # The entry a consumer may still be scanning: its
                     # buffers outlive the eviction until that scan retires.
                     in_flight = evicted.nbytes
@@ -211,7 +245,7 @@ class ResidencyManager:
             # upper bound, never violated by a failure).
             self.failed_builds += 1
             raise
-        self._lru[key] = ResidentEntry(key, payload, nbytes)
+        self._lru[key] = ResidentEntry(key, payload, nbytes, cost)
         if h2d:
             self.uploads += 1
             self.bytes_uploaded += nbytes
@@ -224,6 +258,10 @@ class ResidencyManager:
         )
         self._last_key = key
         return payload
+
+    def resident(self, key: Tuple) -> bool:
+        """Whether ``key`` is device-resident right now (no recency touch)."""
+        return key in self._lru
 
     def drop_matching(self, pred: Callable[[Tuple], bool]) -> int:
         """Drop entries whose key satisfies ``pred`` (a deliberate release
@@ -242,6 +280,141 @@ class ResidencyManager:
         ``evictions`` counter tracks only LRU evictions forced by misses)."""
         self._lru.clear()
         self._last_key = None
+
+
+@dataclasses.dataclass
+class BrickMeta:
+    """Provenance a materialized brick carries into mosaicked results."""
+
+    partial: bool = False                    # quarantine removed coverage
+    uncovered_packs: Tuple[int, ...] = ()    # exec-layout packs missing
+    files_considered: int = 0
+    files_contributing: int = 0
+
+
+class BrickStore:
+    """The materialized-coadd tier of the residency hierarchy (DESIGN.md §9).
+
+    Two tiers per (brick, band, psf_state) key:
+
+    * a **host tier** (always populated at `put` time — the D2H already
+      happened when the brick's `CoaddResult` synced, so keeping the copy
+      is free) holding the coadd + weight (depth) maps and `BrickMeta`.
+      This is also the materialization journal: `CoaddEngine.
+      materialize_bricks` skips any brick already present, which is what
+      makes a killed materialization resume instead of restart.
+    * a **device tier**: entries in the shared `ResidencyManager` under the
+      LRU budget, at `COST_BRICK` (most expensive rebuild class).  Eviction
+      under pressure drops only the device replica — the host copy stands,
+      so a later query re-uploads (one H2D copy) instead of re-scanning the
+      archive.  ``spilled`` counts those pressure drops via the manager's
+      eviction seam; ``spill_loads`` counts serves that had to re-upload.
+
+    Staleness is carried by the key, never checked here: the engine keys
+    bricks on its ``_psf_state()``, so a retuned engine misses and
+    re-materializes rather than mosaicking stale tiles.
+    """
+
+    def __init__(self, residency: ResidencyManager):
+        self.residency = residency
+        self._host: Dict[Tuple, Tuple[np.ndarray, np.ndarray, BrickMeta]] = {}
+        self.hits = 0         # serves straight from the device tier
+        self.spill_loads = 0  # serves that re-uploaded the host copy
+        self.misses = 0       # lookups with no materialized brick at all
+        self.spilled = 0      # device replicas dropped under LRU pressure
+        prev = residency.on_evict
+
+        def _count_spill(key: Tuple, entry: ResidentEntry) -> None:
+            if isinstance(key, tuple) and key and key[0] == "brick":
+                self.spilled += 1
+            if prev is not None:
+                prev(key, entry)
+
+        residency.on_evict = _count_spill
+
+    def __len__(self) -> int:
+        return len(self._host)
+
+    def contains(self, key: Tuple) -> bool:
+        return key in self._host
+
+    def keys(self):
+        return self._host.keys()
+
+    def meta(self, key: Tuple) -> BrickMeta:
+        return self._host[key][2]
+
+    def host_arrays(self, key: Tuple) -> Tuple[np.ndarray, np.ndarray]:
+        """The host-tier (coadd, depth) copies — test/debug access."""
+        coadd, depth, _ = self._host[key]
+        return coadd, depth
+
+    def _nbytes(self, key: Tuple) -> int:
+        coadd, depth, _ = self._host[key]
+        return int(coadd.nbytes) + int(depth.nbytes)
+
+    def _acquire(self, key: Tuple):
+        import jax  # deferred: the host tier itself is jax-free
+
+        coadd, depth, _ = self._host[key]
+        return self.residency.acquire(
+            key,
+            self._nbytes(key),
+            lambda: (jax.device_put(coadd), jax.device_put(depth)),
+            h2d=True,
+            cost=COST_BRICK,
+        )
+
+    def put(
+        self,
+        key: Tuple,
+        coadd: np.ndarray,
+        depth: np.ndarray,
+        meta: Optional[BrickMeta] = None,
+    ):
+        """Store a finished brick (host write-through + device insert).
+
+        Returns the device-tier (coadd, depth) payload so the caller can
+        mosaic immediately without a store lookup (which would miscount a
+        fresh insert as a cache hit).
+        """
+        self._host[key] = (
+            np.asarray(coadd, np.float32),
+            np.asarray(depth, np.float32),
+            meta or BrickMeta(),
+        )
+        return self._acquire(key)
+
+    def fetch(self, key: Tuple):
+        """``(coadd_dev, depth_dev, meta, tier)`` or None when absent.
+
+        ``tier`` is ``"device"`` (already resident) or ``"host"`` (the
+        spill path: the device replica was evicted; serving re-uploads)."""
+        if key not in self._host:
+            self.misses += 1
+            return None
+        was_resident = self.residency.resident(key)
+        payload = self._acquire(key)
+        if was_resident:
+            self.hits += 1
+        else:
+            self.spill_loads += 1
+        coadd, depth = payload
+        return coadd, depth, self._host[key][2], (
+            "device" if was_resident else "host"
+        )
+
+    def drop_device(self) -> int:
+        """Drop every device replica (host tier stands) — the deliberate
+        spill used by tests/drills; LRU pressure does this organically."""
+        return self.residency.drop_matching(
+            lambda k: isinstance(k, tuple) and bool(k) and k[0] == "brick"
+        )
+
+    def clear(self) -> None:
+        """Forget every materialized brick, both tiers."""
+        self._host.clear()
+        self.drop_device()
 
 
 @dataclasses.dataclass

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels.warp.warp import autotune_block_rows  # noqa: F401 (re-export)
 from repro.kernels.warp.warp import coadd_fused as _coadd_fused
+from repro.kernels.warp.warp import mosaic_bricks as _mosaic_bricks
 from repro.kernels.warp.warp import warp_project as _warp_project
 
 
@@ -46,3 +47,9 @@ def coadd_fused(pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels=None,
         pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels=psf_kernels,
         block_rows=block_rows, interpret=interpret,
     )
+
+
+@partial(jax.jit, static_argnames=("npix", "interpret"))
+def mosaic_bricks(tiles, covs, offsets, npix, interpret=True):
+    """(B,bh,bw) cached brick tiles + weights -> (npix,npix) coadd + depth."""
+    return _mosaic_bricks(tiles, covs, offsets, npix, interpret=interpret)

@@ -428,3 +428,60 @@ def coadd_fused(
         interpret=interpret,
     )(*operands)
     return out[0], out[1]
+
+
+# ----- brick mosaic: scatter cached tiles into a query canvas (§9) -----
+def _mosaic_kernel(off_ref, tile_ref, cov_ref, coadd_ref, depth_ref, *, bh, bw):
+    """One grid step merges one brick tile at its dynamic (row, col) offset.
+
+    The outputs map the full canvas on every step (constant index_map), so
+    the accumulate-across-grid-steps idiom of `_coadd_fused_kernel` applies:
+    zero the canvas on the first step, then add each tile through a dynamic
+    slice.  Bricks never overlap, so add == write — but accumulation keeps
+    the merge the same reduce monoid as the XLA `reducer.mosaic_tiles`.
+    """
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        coadd_ref[...] = jnp.zeros_like(coadd_ref)
+        depth_ref[...] = jnp.zeros_like(depth_ref)
+
+    r = off_ref[0, 0]
+    c = off_ref[0, 1]
+    coadd_ref[pl.ds(r, bh), pl.ds(c, bw)] += tile_ref[0]
+    depth_ref[pl.ds(r, bh), pl.ds(c, bw)] += cov_ref[0]
+
+
+def mosaic_bricks(
+    tiles: jnp.ndarray,    # (B, bh, bw) cached brick coadds
+    covs: jnp.ndarray,     # (B, bh, bw) weight (depth) maps
+    offsets: jnp.ndarray,  # (B, 2) int32 (row, col) canvas positions
+    npix: int,
+    *,
+    interpret: bool = True,
+):
+    """(npix, npix) coadd + depth mosaicked from cached brick tiles."""
+    n, bh, bw = tiles.shape
+    out = pl.pallas_call(
+        functools.partial(_mosaic_kernel, bh=bh, bw=bw),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda b: (b, 0)),
+            pl.BlockSpec((1, bh, bw), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, bh, bw), lambda b: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((npix, npix), lambda b: (0, 0)),
+            pl.BlockSpec((npix, npix), lambda b: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npix, npix), jnp.float32),
+            jax.ShapeDtypeStruct((npix, npix), jnp.float32),
+        ],
+        # Tiles accumulate into one canvas: the single grid dim is sequential.
+        compiler_params=_tpu_params(("arbitrary",)),
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), tiles.astype(jnp.float32),
+      covs.astype(jnp.float32))
+    return out[0], out[1]

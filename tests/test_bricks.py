@@ -1,0 +1,280 @@
+"""Brick-tessellated materialized coadds (DESIGN.md §9).
+
+Three contracts under test:
+
+* **Tessellation**: the brick grid covers any footprint exactly — every
+  point lands in one and only one nominal cell, and every brick's pixel
+  grid is bitwise a tile of the one global lattice (property-style over
+  random footprints).
+* **Parity**: a brick-aligned query served by mosaicking cached bricks is
+  *bitwise* identical to the fresh lattice-window scan, across all six
+  methods, the Pallas mosaic kernel, the host-spill path, and partially
+  quarantined bricks (which propagate ``partial=True`` honestly).
+* **Fault domain**: `materialize_bricks` is journaled — a mid-job kill
+  leaves finished bricks in the store and the in-flight brick's window
+  journal intact, and the re-issued job skips the former and resumes the
+  latter.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    BrickGrid,
+    ChaosInjector,
+    CoaddEngine,
+    CoaddQuery,
+    FaultSchedule,
+    METHODS,
+    PoisonSpec,
+    QueryKilled,
+    SurveyConfig,
+    make_survey,
+)
+from repro.core import reducer
+from repro.kernels.warp import ops as warp_ops
+
+
+@pytest.fixture(scope="module")
+def survey():
+    return make_survey(SurveyConfig(n_runs=2, n_fields=4, n_sources=60,
+                                    height=16, width=16))
+
+
+def _engine(survey, **kw):
+    kw.setdefault("pack_capacity", 8)
+    kw.setdefault("brick_deg", 0.5)
+    kw.setdefault("brick_npix", 16)
+    return CoaddEngine(survey, **kw)
+
+
+def _streaming(survey, injector=None, **kw):
+    """A 4x-oversubscribed streaming brick engine (test_faults idiom)."""
+    probe = _engine(survey)
+    ds = probe.exec_dataset("structured")[0]
+    budget = max(ds.chunk_nbytes(0, ds.n_packs) // 4, 1)
+    return _engine(survey, device_budget_bytes=budget, stream_chunk_packs=1,
+                   fault_backoff_s=1e-4, fault_injector=injector, **kw)
+
+
+def _region(grid, r0, r1, c0, c1):
+    """A (ra_bounds, dec_bounds) region intersecting exactly these cells."""
+    eps = 1e-9
+    return (
+        (grid.ra0 + c0 * grid.brick_deg + eps,
+         grid.ra0 + c1 * grid.brick_deg - eps),
+        (grid.dec0 + r0 * grid.brick_deg + eps,
+         grid.dec0 + r1 * grid.brick_deg - eps),
+    )
+
+
+# ----- tessellation: exact cover of the footprint --------------------------
+
+def test_tessellation_covers_random_footprints_exactly():
+    rng = np.random.default_rng(9)
+    for _ in range(20):
+        ra0 = float(rng.uniform(0, 300))
+        dec0 = float(rng.uniform(-10, 10))
+        ra_span = float(rng.uniform(0.3, 4.0))
+        dec_span = float(rng.uniform(0.3, 4.0))
+        bd = float(rng.choice([0.25, 0.5, 1.0]))
+        grid = BrickGrid.for_bounds(ra0, dec0, ra_span, dec_span,
+                                    brick_deg=bd, brick_npix=8)
+        # Coverage: the lattice extends at least to the footprint edge.
+        assert grid.n_cols * bd >= ra_span - 1e-9
+        assert grid.n_rows * bd >= dec_span - 1e-9
+        # No gaps, no double cover: every sample point inside the footprint
+        # locates to exactly one cell, and that cell's nominal (half-open)
+        # box contains it.
+        for _ in range(50):
+            ra = ra0 + float(rng.uniform(0, ra_span))
+            dec = dec0 + float(rng.uniform(0, dec_span))
+            cell = grid.locate(ra, dec)
+            assert cell is not None
+            r, c = cell
+            lo_ra, hi_ra, lo_dec, hi_dec = grid.nominal_box(r, c)
+            assert lo_ra <= ra < hi_ra and lo_dec <= dec < hi_dec
+        # Adjacent nominal boxes tile with shared edges (no slivers).
+        if grid.n_cols > 1:
+            assert grid.nominal_box(0, 0)[1] == grid.nominal_box(0, 1)[0]
+        if grid.n_rows > 1:
+            assert grid.nominal_box(0, 0)[3] == grid.nominal_box(1, 0)[2]
+
+
+def test_brick_grids_are_bitwise_tiles_of_the_lattice():
+    grid = BrickGrid.for_bounds(37.0, -1.0, 1.5, 1.0,
+                                brick_deg=0.5, brick_npix=8)
+    b = grid.brick_npix
+    full_ra, full_dec = grid.window_sky(0, grid.n_rows, 0, grid.n_cols)
+    for r in range(grid.n_rows):
+        for c in range(grid.n_cols):
+            tra, tdec = grid.brick_sky(r, c)
+            np.testing.assert_array_equal(
+                tra, full_ra[r * b:(r + 1) * b, c * b:(c + 1) * b])
+            np.testing.assert_array_equal(
+                tdec, full_dec[r * b:(r + 1) * b, c * b:(c + 1) * b])
+
+
+def test_window_query_roundtrips_through_decompose():
+    grid = BrickGrid.for_bounds(37.0, -1.0, 1.5, 1.0,
+                                brick_deg=0.5, brick_npix=8)
+    cover = grid.decompose(grid.window_query(0, 2, 1, 3, "g"))
+    assert cover is not None
+    assert (cover.r0, cover.r1, cover.c0, cover.c1) == (0, 2, 1, 3)
+    assert cover.bricks == [(0, 1), (0, 2), (1, 1), (1, 2)]
+    # Unaligned shapes refuse to decompose.
+    assert grid.decompose(CoaddQuery(band="g", ra_bounds=(37.1, 37.9),
+                                     dec_bounds=(-0.9, -0.1), npix=16)) is None
+    timed = grid.window_query(0, 1, 0, 1, "g")
+    timed = CoaddQuery(band="g", ra_bounds=timed.ra_bounds,
+                       dec_bounds=timed.dec_bounds, npix=timed.npix,
+                       time_bounds=(0.0, 1.0))
+    assert grid.decompose(timed) is None
+
+
+# ----- parity: mosaic == fresh, bitwise, all six methods -------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_mosaic_matches_fresh_bitwise(survey, method):
+    eng = _engine(survey)
+    wq = eng.brick_grid.window_query(1, 3, 0, 2, "r")
+    fresh = eng.run_window(wq, method)
+    cold = eng.run(wq, method, use_bricks=True)
+    assert cold.stats.bricks_missed == 4 and cold.stats.bricks_hit == 0
+    assert cold.stats.residual_packs_scanned > 0
+    np.testing.assert_array_equal(cold.coadd, fresh.coadd)
+    np.testing.assert_array_equal(cold.depth, fresh.depth)
+    warm = eng.run(wq, method, use_bricks=True)
+    assert warm.stats.bricks_hit == 4 and warm.stats.bricks_missed == 0
+    assert warm.stats.residual_packs_scanned == 0
+    assert warm.stats.dispatches == 1  # just the mosaic merge
+    np.testing.assert_array_equal(warm.coadd, fresh.coadd)
+    np.testing.assert_array_equal(warm.depth, fresh.depth)
+
+
+def test_pallas_mosaic_kernel_matches_xla():
+    rng = np.random.default_rng(3)
+    b, npix = 8, 16
+    offsets = np.array([[0, 0], [0, 8], [8, 0], [8, 8]], np.int32)
+    tiles = rng.normal(size=(4, b, b)).astype(np.float32)
+    covs = rng.uniform(size=(4, b, b)).astype(np.float32)
+    xc, xd = reducer.mosaic_tiles(tiles, covs, offsets, npix)
+    kc, kd = warp_ops.mosaic_bricks(tiles, covs, offsets, npix)
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(xc))
+    np.testing.assert_array_equal(np.asarray(kd), np.asarray(xd))
+
+
+def test_kernel_engine_mosaic_parity(survey):
+    eng = _engine(survey, use_kernel=True)
+    wq = eng.brick_grid.window_query(1, 3, 0, 2, "r")
+    fresh = eng.run_window(wq, "sql_structured")
+    eng.run(wq, "sql_structured", use_bricks=True)  # materialize
+    warm = eng.run(wq, "sql_structured", use_bricks=True)
+    assert warm.stats.bricks_hit == 4
+    np.testing.assert_array_equal(warm.coadd, fresh.coadd)
+    np.testing.assert_array_equal(warm.depth, fresh.depth)
+
+
+def test_spilled_bricks_serve_from_host_tier(survey):
+    eng = _engine(survey)
+    wq = eng.brick_grid.window_query(1, 3, 0, 2, "r")
+    fresh = eng.run_window(wq, "sql_structured")
+    eng.materialize_bricks(bands=("r",))
+    dropped = eng.brick_store.drop_device()
+    assert dropped >= 4
+    r = eng.run(wq, "sql_structured", use_bricks=True)
+    # Every tile re-uploaded from the host copy: no recompute, no scan.
+    assert r.stats.bricks_spilled == 4
+    assert r.stats.bricks_hit == 0 and r.stats.bricks_missed == 0
+    assert r.stats.residual_packs_scanned == 0
+    assert eng.brick_store.spill_loads >= 4
+    np.testing.assert_array_equal(r.coadd, fresh.coadd)
+    np.testing.assert_array_equal(r.depth, fresh.depth)
+
+
+def test_unaligned_query_falls_back_transparently(survey):
+    eng = _engine(survey)
+    q = CoaddQuery(band="r", ra_bounds=(37.0, 37.3),
+                   dec_bounds=(-0.5, -0.2), npix=48)
+    plain = eng.run(q, "sql_structured")
+    fb = eng.run(q, "sql_structured", use_bricks=True)
+    assert fb.stats.bricks_hit == 0 and fb.stats.bricks_missed == 0
+    np.testing.assert_array_equal(fb.coadd, plain.coadd)
+    np.testing.assert_array_equal(fb.depth, plain.depth)
+
+
+def test_materialized_bricks_key_on_psf_state(survey):
+    eng = _engine(survey)
+    wq = eng.brick_grid.window_query(1, 3, 0, 2, "r")
+    eng.run(wq, "sql_structured", use_bricks=True)
+    # Retune: same store, different psf state — every key must miss.
+    eng.match_psf_sigma = 2.0
+    wq2 = eng.brick_grid.window_query(1, 3, 0, 2, "r")
+    r = eng.run(wq2, "sql_structured", use_bricks=True)
+    assert r.stats.bricks_missed == 4 and r.stats.bricks_hit == 0
+
+
+# ----- partial bricks propagate --------------------------------------------
+
+def test_partial_brick_propagates_into_mosaic(survey):
+    probe = _streaming(survey)
+    plan = probe._brick_plan("r", 1, 0, "sql_structured")
+    gated = np.nonzero(probe._exec_gate(plan).any(axis=1))[0]
+    assert len(gated) > 0
+    bad = int(gated[0])
+    inj = ChaosInjector(FaultSchedule(
+        poison=(PoisonSpec(pack=bad, mode="nan", count=None),)  # persistent
+    ))
+    eng = _streaming(survey, injector=inj, on_fault="quarantine")
+    rep = eng.materialize_bricks(bands=("r",),
+                                 region=_region(eng.brick_grid, 1, 3, 0, 2))
+    assert rep.completed == 4 and rep.partial_bricks >= 1
+    wq = eng.brick_grid.window_query(1, 3, 0, 2, "r")
+    r = eng.run(wq, "sql_structured", use_bricks=True)
+    assert r.stats.bricks_hit == 4
+    assert r.stats.partial
+    assert bad in r.stats.uncovered_packs
+
+
+# ----- kill-and-resume of materialization ----------------------------------
+
+def test_materialize_survives_kill_and_resume(survey):
+    region_args = (1, 3, 0, 2)
+    # Aim the kill mid-job: brick 1's second window, so brick 0 finishes
+    # and brick 1 leaves a non-empty window journal behind.
+    probe = _streaming(survey)
+    cells = probe.brick_grid.bricks(_region(probe.brick_grid, *region_args))
+    assert len(cells) == 4
+
+    def n_windows(engine, cell):
+        plan = engine._brick_plan("r", cell[0], cell[1], "sql_structured")
+        exec_ds, _ = engine.exec_dataset(plan.layout)
+        gate = engine._exec_gate(plan)
+        return len(engine._stream_windows(exec_ds, gate.any(axis=1)))
+    assert n_windows(probe, cells[1]) >= 2
+    kill_after = n_windows(probe, cells[0]) + 1
+
+    inj = ChaosInjector(FaultSchedule(kill_after_windows=kill_after))
+    eng = _streaming(survey, injector=inj)
+    with pytest.raises(QueryKilled):
+        eng.materialize_bricks(bands=("r",),
+                               region=_region(eng.brick_grid, *region_args))
+    done = len(eng.brick_store)
+    assert 0 < done < len(cells)          # finished bricks persisted
+    assert len(eng._journals) == 1        # in-flight brick's journal kept
+
+    # Re-issue: finished bricks skip, the killed one resumes its journal.
+    rep = eng.materialize_bricks(bands=("r",),
+                                 region=_region(eng.brick_grid, *region_args))
+    assert rep.skipped == done
+    assert rep.completed == len(cells) - done
+    assert any(t.resumed_windows > 0 for t in rep.tasks)
+    assert len(eng.brick_store) == len(cells)
+
+    # The resumed store serves bitwise-correct mosaics.
+    clean = _streaming(survey)
+    wq = eng.brick_grid.window_query(*region_args, "r")
+    fresh = clean.run_window(wq, "sql_structured")
+    warm = eng.run(wq, "sql_structured", use_bricks=True)
+    assert warm.stats.bricks_hit == 4
+    np.testing.assert_array_equal(warm.coadd, fresh.coadd)
+    np.testing.assert_array_equal(warm.depth, fresh.depth)

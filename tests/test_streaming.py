@@ -88,6 +88,35 @@ def test_residency_manager_lru_eviction_order():
         ResidencyManager(budget_bytes=0)
 
 
+def test_cost_aware_eviction_prefers_cheap_entries():
+    """Under pressure the LRU sheds the cheapest-to-rebuild class first:
+    raw chunks before matched chunks before brick tiles, regardless of
+    recency; within a class, recency still decides (DESIGN.md §9)."""
+    from repro.core.seqfile import (
+        COST_BRICK, COST_MATCHED_CHUNK, COST_RAW_CHUNK,
+    )
+    mk = lambda name: (lambda: name)  # noqa: E731
+    mgr = ResidencyManager(budget_bytes=300)
+    # Oldest entry is the *most* expensive — plain LRU would evict it first.
+    mgr.acquire(("brick", 0), 100, mk("brick"), cost=COST_BRICK)
+    mgr.acquire(("raw", 0), 100, mk("raw0"), cost=COST_RAW_CHUNK)
+    mgr.acquire(("raw", 1), 100, mk("raw1"), cost=COST_RAW_CHUNK)
+    evicted = []
+    mgr.on_evict = lambda key, entry: evicted.append(key)
+    # Touch raw0 so it is *more* recent than raw1; cheapest class evicts in
+    # its own LRU order: raw1 first, then raw0, and the brick survives both.
+    mgr.acquire(("raw", 1), 100, mk("raw1-again"))
+    mgr.acquire(("matched", 0), 100, mk("m0"), cost=COST_MATCHED_CHUNK)
+    assert evicted == [("raw", 0)]
+    mgr.acquire(("matched", 1), 100, mk("m1"), cost=COST_MATCHED_CHUNK)
+    assert evicted == [("raw", 0), ("raw", 1)]
+    # Only matched + brick left; matched is now the cheapest class.
+    mgr.acquire(("raw", 2), 100, mk("raw2"), cost=COST_RAW_CHUNK)
+    assert evicted == [("raw", 0), ("raw", 1), ("matched", 0)]
+    assert mgr.resident(("brick", 0))  # most expensive entry outlived all
+    # Uniform costs degrade to plain LRU (pinned by the test above).
+
+
 # ----- parity: streaming == eager ------------------------------------------
 
 @pytest.mark.parametrize("method", [m for m in METHODS])
