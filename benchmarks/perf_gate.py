@@ -16,7 +16,11 @@ Independently of any baseline, the fault-tracker clean-path overhead row
 (``fault_overhead`` in the report) is gated absolutely at
 ``--fault-threshold`` (default 1.1x): the WindowTracker must not cost more
 than 10% over the untracked streaming loop, and its result must be bitwise
-identical.  Likewise the brick rows (``bricks`` in the report) are gated
+identical.  The disk-journal row (``durable_overhead``) is gated the same
+way at ``--durable-threshold`` (default 1.15x): writing every window
+partial through a checksummed, fsynced journal must stay within 15% of the
+in-memory run, bitwise-equal, with zero journal jobs left after a clean
+exit.  Likewise the brick rows (``bricks`` in the report) are gated
 absolutely at ``--brick-threshold`` (default 3.0x): warm brick-served
 queries must beat the brick-free fresh scan by at least that factor, with
 bitwise-identical results.
@@ -105,6 +109,44 @@ def fault_overhead_gate(current: Dict, threshold: float) -> Tuple[List[str], Lis
     return regressions, lines
 
 
+def durable_overhead_gate(
+    current: Dict, threshold: float
+) -> Tuple[List[str], List[str]]:
+    """Absolute gate on the disk journal's clean-path cost (§8 durable).
+
+    Journal-on and journal-off engines ran side by side in the same --quick
+    invocation, so no baseline artifact is needed: the ratio is gated
+    absolutely at <= ``threshold``, the results must agree bitwise, and a
+    clean run must leave zero journal jobs behind (completion GC).
+    """
+    rec = current.get("durable_overhead")
+    if not rec:
+        return [], ["  durable_overhead: no rows (old artifact?)"]
+    ratio = float(rec["overhead_ratio"])
+    regressions: List[str] = []
+    lines = [
+        f"  durable_overhead: journal on {rec['us_per_image_journal_on']:.1f} "
+        f"vs off {rec['us_per_image_journal_off']:.1f} us/img "
+        f"({ratio:.3f}x, gate <= {threshold:.2f}x)"
+    ]
+    if ratio > threshold:
+        regressions.append(
+            f"durable_overhead: {ratio:.3f}x > {threshold:.2f}x "
+            f"clean-path budget"
+        )
+    if not rec.get("bitwise_equal", True):
+        regressions.append(
+            "durable_overhead: journaled result differs from in-memory "
+            "(the journal is a side channel, never an operand)"
+        )
+    if rec.get("jobs_left", 0):
+        regressions.append(
+            f"durable_overhead: {rec['jobs_left']} journal job(s) survived "
+            f"a clean run (completion GC broken)"
+        )
+    return regressions, lines
+
+
 def brick_gate(current: Dict, threshold: float) -> Tuple[List[str], List[str]]:
     """Absolute gate on brick-served query speedup (DESIGN.md §9).
 
@@ -153,6 +195,9 @@ def trajectory_row(current: Dict, sha: str, ref: str) -> Dict:
     fo = current.get("fault_overhead")
     if fo:
         row["fault_overhead_ratio"] = fo.get("overhead_ratio")
+    do = current.get("durable_overhead")
+    if do:
+        row["durable_overhead_ratio"] = do.get("overhead_ratio")
     bricks = current.get("bricks")
     if bricks and bricks.get("rows"):
         row["brick_speedups"] = {
@@ -181,6 +226,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--fault-threshold", type=float, default=1.1,
                     help="absolute ceiling on the WindowTracker clean-path "
                          "overhead ratio (tracker-on vs tracker-off)")
+    ap.add_argument("--durable-threshold", type=float, default=1.15,
+                    help="absolute ceiling on the disk-journal clean-path "
+                         "overhead ratio (journal-on vs journal-off)")
     ap.add_argument("--brick-threshold", type=float, default=3.0,
                     help="absolute floor on warm brick-served speedup vs "
                          "the brick-free fresh scan")
@@ -212,6 +260,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     print("perf-gate: fault-tracker clean-path overhead:")
     print("\n".join(fault_lines))
     regressions += fault_regressions
+
+    durable_regressions, durable_lines = durable_overhead_gate(
+        current, args.durable_threshold)
+    print("perf-gate: durable-journal clean-path overhead:")
+    print("\n".join(durable_lines))
+    regressions += durable_regressions
 
     brick_regressions, brick_lines = brick_gate(current, args.brick_threshold)
     print("perf-gate: brick-served warm vs cold:")

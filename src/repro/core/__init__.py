@@ -6,6 +6,7 @@ Public API:
 """
 
 from repro.core.bricks import BrickCover, BrickGrid
+from repro.core.durable import BrickSpill, DiskJournal, JournalStore
 from repro.core.engine import METHODS, CoaddEngine, CoaddResult, JobStats
 from repro.core.faults import (
     ChaosInjector,
@@ -47,9 +48,11 @@ __all__ = [
     "BrickCover",
     "BrickGrid",
     "BrickMeta",
+    "BrickSpill",
     "BrickStore",
     "BrickTask",
     "ChaosInjector",
+    "DiskJournal",
     "CoaddEngine",
     "CoaddPlan",
     "CoaddResult",
@@ -62,6 +65,7 @@ __all__ = [
     "FaultSchedule",
     "JobStats",
     "JobTracker",
+    "JournalStore",
     "MapTask",
     "MaterializeReport",
     "METHODS",

@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import os
 import time
 from collections import OrderedDict
 from functools import partial
@@ -74,6 +75,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import mapper, psf, reducer
 from repro.core.bricks import BrickCover, BrickGrid
+from repro.core.durable import BrickSpill, JournalStore
 from repro.core.faults import ChaosInjector, PoisonedChunkError
 from repro.core.jobtracker import (
     BrickTask,
@@ -191,6 +193,9 @@ class JobStats:
     resumed_windows: int = 0       # journal hits replayed instead of re-run
     partial: bool = False          # True when quarantine removed coverage
     uncovered_packs: Tuple[int, ...] = ()  # exec-layout packs quarantined out
+    requarantine_released: int = 0 # packs restored by digest re-verification
+                                   #   (`reverify_quarantined`) since the
+                                   #   previous streaming result; additive
     # Brick-serving accounting (DESIGN.md §9) — how `run(use_bricks=True)`
     # covered this query.  All additive (a mosaic is one result); zero on
     # every brick-free path.  ``bricks_hit`` counts tiles served from the
@@ -488,6 +493,8 @@ class CoaddEngine:
         fault_injector: Optional[ChaosInjector] = None,
         brick_deg: float = 0.25,
         brick_npix: int = 64,
+        journal_dir: Optional[str] = None,
+        journal_max_age_s: float = 7 * 86400.0,
     ):
         self.survey = survey
         self.use_kernel = use_kernel
@@ -548,6 +555,25 @@ class CoaddEngine:
         # capped: a re-issued query replays only its missing windows.
         self._journals: "OrderedDict[str, Dict]" = OrderedDict()
         self._journal_cap = 16
+        # Durable fault domain (DESIGN.md §8): with ``journal_dir`` set,
+        # window journals write through to crash-safe on-disk segments
+        # (`durable.JournalStore`) and the BrickStore host tier persists
+        # (`durable.BrickSpill`) — a SIGKILLed query or materialization
+        # resumes bitwise in a *fresh process*.  Journals of completed jobs
+        # are removed atomically; orphans older than ``journal_max_age_s``
+        # are swept here at init.
+        self.journal_dir = journal_dir
+        self.journal_store: Optional[JournalStore] = None
+        brick_spill = None
+        if journal_dir is not None:
+            self.journal_store = JournalStore(
+                os.path.join(journal_dir, "windows"),
+                max_age_s=journal_max_age_s,
+            )
+            brick_spill = BrickSpill(os.path.join(journal_dir, "bricks"))
+        # Quarantine releases since the last streaming result, reported as
+        # JobStats.requarantine_released by the next query (additive).
+        self._requarantine_pending = 0
         self.residency = ResidencyManager(device_budget_bytes)
         if fault_injector is not None:
             self.residency.fault_hook = fault_injector.on_upload
@@ -571,7 +597,7 @@ class CoaddEngine:
         self.brick_deg = brick_deg
         self.brick_npix = brick_npix
         self._brick_grid: Optional[BrickGrid] = None
-        self.brick_store = BrickStore(self.residency)
+        self.brick_store = BrickStore(self.residency, spill=brick_spill)
 
     # ----- dataset layouts (built lazily, cached) -----
     def dataset(self, layout: str) -> PackedDataset:
@@ -1033,12 +1059,17 @@ class CoaddEngine:
 
         A digest over everything that determines a window partial's value —
         method/layout/PSF state, the gate and query-vector bytes, the output
-        grid size, and the window partition itself — so a resumed query
-        replays journaled partials only when they are bitwise-valid for it.
+        grid size, the window partition itself, and the persistent
+        quarantine set (a pack released between kill and resume changes the
+        partials bitwise, so the resumed job must miss, not replay) — so a
+        resumed query replays journaled partials only when they are
+        bitwise-valid for it.
         """
+        quar = tuple(sorted(self.residency.quarantined_packs(layout)))
         h = hashlib.sha256()
         h.update(
-            f"{method}|{layout}|{npix}|{self._psf_state()}|{grid_tag}".encode()
+            f"{method}|{layout}|{npix}|{self._psf_state()}|{grid_tag}"
+            f"|q{quar}".encode()
         )
         h.update(np.ascontiguousarray(gates).tobytes())
         h.update(np.ascontiguousarray(qvecs, np.float32).tobytes())
@@ -1050,15 +1081,52 @@ class CoaddEngine:
         return h.hexdigest()
 
     def _journal_for(self, job_key: str) -> Dict:
-        """The (possibly resumed) window journal for a job, LRU-capped."""
+        """The (possibly resumed) window journal for a job, LRU-capped.
+
+        In-memory dict by default; with ``journal_dir`` a `DiskJournal`
+        that replays any valid on-disk prefix at open — the resume path for
+        a *fresh process* (the cap then only bounds open handles; disk
+        state is untouched until completion removes it).
+        """
         journal = self._journals.get(job_key)
         if journal is None:
-            journal = self._journals[job_key] = {}
+            if self.journal_store is not None:
+                journal = self.journal_store.open(job_key)
+            else:
+                journal = {}
+            self._journals[job_key] = journal
             while len(self._journals) > self._journal_cap:
-                self._journals.popitem(last=False)
+                _, old = self._journals.popitem(last=False)
+                if hasattr(old, "close"):
+                    old.close()
         else:
             self._journals.move_to_end(job_key)
         return journal
+
+    def reverify_quarantined(self, layout: Optional[str] = None) -> List[int]:
+        """Re-verify quarantined packs against the host seqfile (§8).
+
+        Quarantine auto-release: for every registered layout (or just
+        ``layout``), re-hash the quarantined packs' *current* host pixels;
+        packs that verify — repaired in place, or never host-corrupt at all
+        — leave the registry and regain gate coverage on the next query.
+        Returns the released global pack indices; the count also surfaces as
+        ``JobStats.requarantine_released`` on the next streaming result.
+        """
+        layouts = (
+            [layout] if layout is not None
+            else list(self.residency.quarantined)
+        )
+        released: List[int] = []
+        for lay in layouts:
+            exec_ds, _ = self.exec_dataset(lay)
+            released.extend(self.residency.reverify_quarantined(lay, exec_ds))
+        self._requarantine_pending += len(released)
+        return released
+
+    def _take_requarantine_released(self) -> int:
+        n, self._requarantine_pending = self._requarantine_pending, 0
+        return n
 
     def _empty_streaming_result(self, plan: CoaddPlan) -> CoaddResult:
         """The empty-selection answer under a device budget: exact zeros,
@@ -1122,12 +1190,14 @@ class CoaddEngine:
                                                nxt.start, nxt.stop)
             fc, quarantined = FaultCounters(), ()
         else:
+            pre_quar = self.residency.quarantined_packs(layout)
             tracker = WindowTracker(
                 policy=self.on_fault,
                 max_attempts=self.fault_max_attempts,
                 backoff_s=self.fault_backoff_s,
                 straggler_factor=self.straggler_factor,
                 injector=self.fault_injector,
+                quarantined=pre_quar,
             )
             acquire = lambda win, drop: self._resident_chunk(  # noqa: E731
                 layout, exec_ds, win.start, win.stop, drop=drop
@@ -1135,13 +1205,40 @@ class CoaddEngine:
             disp = lambda ops, win, drop: dispatch(  # noqa: E731
                 ops[0], ops[1], win, drop
             )
-            acc, quarantined = tracker.run(
-                windows, acquire, disp, self._journal_for(job_key)
-            )
+            journal = self._journal_for(job_key)
+            try:
+                acc, quarantined = tracker.run(
+                    windows, acquire, disp, journal
+                )
+            except BaseException:
+                # Durability point: fsync the disk journal so a fatal (an
+                # injected kill, an OOM about to follow) leaves every
+                # finished window committed for the resume.  Clean
+                # completion skips the barrier — the journal is removed
+                # two lines below, so syncing it first buys nothing.
+                if hasattr(journal, "drain"):
+                    journal.drain()
+                raise
+            finally:
+                # Fresh quarantines persist even when the query dies: the
+                # registry (released only by `reverify_quarantined`) is
+                # what lets later queries skip the poison without re-paying
+                # the retry storm.
+                fresh = tracker.quarantined - set(pre_quar)
+                if fresh:
+                    self.residency.quarantine_packs(
+                        layout, fresh,
+                        getattr(exec_ds, "_pack_digest_cache", None),
+                    )
             # Completed: the journal has served its purpose.  (A kill or a
             # fatal error raises out above this line, *keeping* the journal
-            # — that asymmetry is the resume contract.)
-            self._journals.pop(job_key, None)
+            # — that asymmetry is the resume contract, in-memory and on
+            # disk alike; only clean completion garbage-collects.)
+            old = self._journals.pop(job_key, None)
+            if hasattr(old, "close"):
+                old.close()
+            if self.journal_store is not None:
+                self.journal_store.remove(job_key)
             fc, quarantined = tracker.counters, tuple(quarantined)
         _sync(acc[0])
         elapsed = time.perf_counter() - t1
@@ -1206,6 +1303,10 @@ class CoaddEngine:
             self._run_stream_windows(plan.layout, exec_ds, windows, dispatch,
                                      job_key)
         uploads, hits, evictions = counters
+        # Coverage honesty: only quarantined packs this query's gate actually
+        # opens are *uncovered* for it — persistent quarantine on packs the
+        # query never wanted is not a partial answer.
+        quar = tuple(p for p in quar if gate[p].any())
         stats = JobStats(
             method=plan.method,
             files_considered=int(considered),
@@ -1233,6 +1334,7 @@ class CoaddEngine:
             resumed_windows=fc.resumed_windows,
             partial=bool(quar),
             uncovered_packs=quar,
+            requarantine_released=self._take_requarantine_released(),
         )
         return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
 
@@ -1747,6 +1849,11 @@ class CoaddEngine:
             self._run_stream_windows(layout, exec_ds, windows, dispatch,
                                      job_key)
         uploads, hits, evictions = counters
+        # Same coverage honesty as the single path: uncovered = quarantined
+        # AND opened by at least one of the batch's gates.
+        union_gate = gates.any(axis=0)
+        quar = tuple(p for p in quar if union_gate[p].any())
+        released = self._take_requarantine_released()
         contribs = np.asarray(contribs)
         considered = np.asarray(considered)
         scanned = sum(w.budget for w in windows)
@@ -1782,6 +1889,7 @@ class CoaddEngine:
                 resumed_windows=fc.resumed_windows if i == 0 else 0,
                 partial=bool(quar),
                 uncovered_packs=quar,
+                requarantine_released=released if i == 0 else 0,
             )
             results.append(
                 CoaddResult(np.asarray(coadds[i]), np.asarray(depths[i]), stats)

@@ -35,8 +35,9 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import statistics
+import threading
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Set
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
 
 import numpy as np
 
@@ -249,6 +250,8 @@ class WindowTracker:
         straggler_min_windows: int = 2,
         injector=None,
         sleep: Callable[[float], None] = time.sleep,
+        quarantined: Optional[Iterable[int]] = None,
+        concurrent_speculation: bool = True,
     ):
         if policy not in ("retry", "quarantine", "raise"):
             raise ValueError(
@@ -264,10 +267,21 @@ class WindowTracker:
         self.straggler_min_windows = straggler_min_windows
         self.injector = injector
         self._sleep = sleep
+        # Concurrent speculation (§8): straggler backups run on a worker
+        # thread so the main loop proceeds to the next window while the
+        # backup re-executes; digest agreement is checked when the backups
+        # drain at the end of the run.  False restores the serialized
+        # inline backup (the PR 6 behavior).
+        self.concurrent_speculation = concurrent_speculation
         self.counters = FaultCounters()
         self.events: List[str] = []
         self.durations: List[float] = []
-        self.quarantined: Set[int] = set()
+        # Pre-quarantined packs (e.g. the engine's persistent registry,
+        # released only by `ResidencyManager.reverify_quarantined`): they
+        # gate out from window zero and report as uncovered, but only
+        # *fresh* quarantines count in ``counters.quarantined_packs``.
+        self.quarantined: Set[int] = set(quarantined or ())
+        self._backups: List[Dict] = []
 
     def _backoff(self, attempt: int) -> None:
         self._sleep(min(self.backoff_s * (2 ** (attempt - 1)), self.backoff_cap_s))
@@ -276,47 +290,116 @@ class WindowTracker:
         """Execute ``windows``; return ``(partials, sorted quarantined packs)``.
 
         ``journal`` maps ``win.key -> partial tuple`` and belongs to the
-        caller: completed windows are written through as they finish, so a
-        `QueryKilled` (or any fatal error) leaves every finished window
-        journaled — a rerun with the same journal replays only the missing
-        ones (``resumed_windows`` counts the hits).
+        caller: completed windows are written through as they finish (each
+        commit deferred one window so it overlaps the successor's compute),
+        and a `QueryKilled` (or any fatal error) still leaves every
+        finished window journaled — a rerun with the same journal replays
+        only the missing ones (``resumed_windows`` counts the hits).
         """
         acc = None
         prefetched: Dict = {}
-        for i, win in enumerate(windows):
-            key = win.key
-            if key in journal:
-                part = journal[key]
-                self.counters.resumed_windows += 1
-                self.events.append(f"journal-hit window={key}")
-            else:
-                part = self._run_window(
-                    win, acquire, dispatch, prefetched.pop(key, None)
-                )
-                journal[key] = part
-                if self.injector is not None:
-                    # After journaling: an injected kill loses no finished work.
-                    self.injector.on_window_complete(win)
-            acc = part if acc is None else tuple(
-                a + b for a, b in zip(acc, part)
-            )
-            if i + 1 < len(windows) and windows[i + 1].key not in journal:
-                nxt = windows[i + 1]
-                try:
-                    # Double buffer: the next chunk's async upload rides
-                    # behind this window's in-flight scan; the operands are
-                    # carried so the window doesn't re-acquire.
-                    prefetched[nxt.key] = acquire(
-                        nxt, frozenset(self.quarantined)
+        pending = None  # (win, part) committed once the next window is live
+
+        def flush(seam: bool) -> None:
+            # Commit the held partial.  ``seam`` gates the injector's
+            # kill-after-journaling hook: on the unwind path a fatal is
+            # already in flight, so only the journal write happens.
+            nonlocal pending
+            if pending is None:
+                return
+            pwin, ppart = pending
+            pending = None
+            journal[pwin.key] = ppart
+            if seam and self.injector is not None:
+                # After journaling: an injected kill loses no finished work.
+                self.injector.on_window_complete(pwin)
+
+        try:
+            try:
+                for i, win in enumerate(windows):
+                    key = win.key
+                    if key in journal:
+                        flush(True)
+                        part = journal[key]
+                        self.counters.resumed_windows += 1
+                        self.events.append(f"journal-hit window={key}")
+                        self._prefetch(i, windows, journal, acquire,
+                                       prefetched)
+                    else:
+                        part = self._run_window(
+                            win, acquire, dispatch, prefetched.pop(key, None)
+                        )
+                        # Software pipeline: start the next chunk's upload,
+                        # THEN commit the previous window — a disk journal's
+                        # host sync now overlaps this window's in-flight
+                        # compute instead of serializing the stream.  This
+                        # window's own commit waits until the next one is
+                        # dispatched (or the loop/unwind flush below).
+                        self._prefetch(i, windows, journal, acquire,
+                                       prefetched)
+                        flush(True)
+                        pending = (win, part)
+                    acc = part if acc is None else tuple(
+                        a + b for a, b in zip(acc, part)
                     )
-                except Exception as e:
-                    # The prefetch is opportunistic: surface the failure when
-                    # the window itself runs (fatal errors re-raise there
-                    # too).  The consumed attempt still counts as a retry.
-                    if classify(e) == "transient":
-                        self.counters.retries += 1
-                    self.events.append(f"prefetch-fault window={nxt.key}: {e}")
+                flush(True)
+            finally:
+                # A fatal above must not lose a finished-but-uncommitted
+                # window: the resume contract is that every completed
+                # window is journaled when the query dies.
+                flush(False)
+        finally:
+            # Join in-flight backups even when a fatal error escapes: their
+            # threads read shared engine state and must retire first.
+            backups, self._backups = self._backups, []
+            for rec in backups:
+                rec["thread"].join()
+        self._verify_backups(backups)
         return acc, sorted(self.quarantined)
+
+    def _prefetch(self, i, windows, journal, acquire, prefetched) -> None:
+        """Double buffer: start the next chunk's async upload now.
+
+        The operands are carried so the window doesn't re-acquire; the
+        prefetch is opportunistic — a failure surfaces when the window
+        itself runs (fatal errors re-raise there too), though a consumed
+        transient attempt still counts as a retry.
+        """
+        if i + 1 >= len(windows) or windows[i + 1].key in journal:
+            return
+        nxt = windows[i + 1]
+        try:
+            prefetched[nxt.key] = acquire(nxt, frozenset(self.quarantined))
+        except Exception as e:
+            if classify(e) == "transient":
+                self.counters.retries += 1
+            self.events.append(f"prefetch-fault window={nxt.key}: {e}")
+
+    def _verify_backups(self, backups: List[Dict]) -> None:
+        """Enforce digest agreement for drained concurrent backups.
+
+        A backup that failed transiently gets one inline re-execution (its
+        purpose is the determinism proof, so it must actually produce a
+        digest); fatal errors — and disagreement — escape as ever.
+        """
+        for rec in backups:
+            err = rec.get("error")
+            if err is not None:
+                if classify(err) == "fatal":
+                    raise err
+                self.counters.retries += 1
+                self.events.append(
+                    f"backup-retry window={rec['win'].key}: {err}"
+                )
+                backup = _block(
+                    rec["dispatch"](rec["ops"], rec["win"], rec["drop"])
+                )
+                rec["digest"] = partial_digest(backup)
+            if rec["digest"] != rec["primary_digest"]:
+                raise DeterminismError(
+                    f"window {rec['win'].key}: primary digest "
+                    f"{rec['primary_digest']} != backup {rec['digest']}"
+                )
 
     def _run_window(self, win, acquire, dispatch, ops=None):
         attempt = 0
@@ -383,12 +466,36 @@ class WindowTracker:
         self.events.append(
             f"speculative window={win.key} dt={dt:.4f}s median={median:.4f}s"
         )
-        backup = _block(dispatch(ops, win, frozenset(self.quarantined)))
-        d0, d1 = partial_digest(part), partial_digest(backup)
-        if d0 != d1:
-            raise DeterminismError(
-                f"window {win.key}: primary digest {d0} != backup {d1}"
-            )
+        drop = frozenset(self.quarantined)
+        if not self.concurrent_speculation:
+            backup = _block(dispatch(ops, win, drop))
+            d0, d1 = partial_digest(part), partial_digest(backup)
+            if d0 != d1:
+                raise DeterminismError(
+                    f"window {win.key}: primary digest {d0} != backup {d1}"
+                )
+            return
+        # Concurrent: the backup dispatch runs on a worker thread while the
+        # main loop moves on to later windows — a slow primary no longer
+        # serializes its own backup.  Digest agreement is enforced when the
+        # run drains (`_verify_backups`); the digest of the primary is taken
+        # now, while ``part`` is known-final.
+        rec: Dict = {
+            "win": win, "ops": ops, "dispatch": dispatch, "drop": drop,
+            "primary_digest": partial_digest(part), "digest": None,
+        }
+
+        def _backup() -> None:
+            try:
+                rec["digest"] = partial_digest(_block(dispatch(ops, win, drop)))
+            except BaseException as e:  # joined + reclassified at drain
+                rec["error"] = e
+
+        rec["thread"] = threading.Thread(
+            target=_backup, name=f"backup-{win.key}", daemon=True
+        )
+        self._backups.append(rec)
+        rec["thread"].start()
 
 
 # ----- brick materialization as tracked tasks (DESIGN.md §9) -----

@@ -25,7 +25,17 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    FrozenSet,
+    Iterable,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 import numpy as np
 
@@ -178,6 +188,72 @@ class ResidencyManager:
         # is a bug, not weather).
         self.on_evict: Optional[Callable[[Tuple, ResidentEntry], None]] = None
         self._last_key: Optional[Tuple] = None  # most recently served entry
+        # Persistent quarantine registry (DESIGN.md §8): packs whose host
+        # data failed verification persistently, per execution layout, each
+        # with the *reference* content digest recorded at detection time
+        # (None when no pre-corruption digest existed).  Queries gate these
+        # out until `reverify_quarantined` proves the host data repaired.
+        self.quarantined: Dict[str, Dict[int, Optional[bytes]]] = {}
+        self.quarantine_released = 0  # packs restored by re-verification
+
+    # ----- persistent quarantine (DESIGN.md §8) -----
+    def quarantine_packs(
+        self,
+        layout: str,
+        packs: Iterable[int],
+        digests: Optional[Sequence[Optional[bytes]]] = None,
+    ) -> None:
+        """Register persistently poisoned packs for ``layout``.
+
+        ``digests`` is the per-pack reference digest list (the host
+        seqfile's `pack_digests` cache) when one predates the corruption;
+        packs without a reference re-verify on the NaN/Inf scan alone.
+        """
+        reg = self.quarantined.setdefault(layout, {})
+        for p in packs:
+            p = int(p)
+            ref = None
+            if digests is not None and p < len(digests):
+                ref = digests[p]
+            reg.setdefault(p, ref)
+
+    def quarantined_packs(self, layout: str) -> FrozenSet[int]:
+        return frozenset(self.quarantined.get(layout, ()))
+
+    def reverify_quarantined(self, layout: str, exec_ds) -> List[int]:
+        """Re-hash quarantined packs against the host seqfile; release matches.
+
+        A pack is released when its *current* host pixels are finite and —
+        when a reference digest was recorded at quarantine time — hash back
+        to that reference: the host data was repaired (or was never bad,
+        only its transfers were).  Released packs leave the registry, their
+        sanitized chunk-cache entries drop (so the next query rebuilds full
+        coverage), and ``quarantine_released`` counts them.
+        """
+        reg = self.quarantined.get(layout)
+        if not reg:
+            return []
+        released: List[int] = []
+        for p, ref in sorted(reg.items()):
+            row = np.ascontiguousarray(exec_ds.pixels[p])
+            if not np.isfinite(row).all():
+                continue  # still poisoned
+            if ref is not None and hashlib.sha256(row.tobytes()).digest() != ref:
+                continue  # finite but still not the ingested bytes
+            released.append(p)
+        for p in released:
+            del reg[p]
+        if not reg:
+            del self.quarantined[layout]
+        if released:
+            # Sanitized chunks (key carries the "quarantine" drop tuple)
+            # are stale now; drop them so coverage rebuilds immediately.
+            self.drop_matching(
+                lambda k: isinstance(k, tuple) and "quarantine" in k
+                and k and k[0] == layout
+            )
+            self.quarantine_released += len(released)
+        return released
 
     @property
     def bytes_resident(self) -> int:
@@ -313,15 +389,25 @@ class BrickStore:
     Staleness is carried by the key, never checked here: the engine keys
     bricks on its ``_psf_state()``, so a retuned engine misses and
     re-materializes rather than mosaicking stale tiles.
+
+    With a ``spill`` backend (`durable.BrickSpill`, wired by
+    ``CoaddEngine(journal_dir=...)``) the host tier is *persistent*: every
+    `put` writes an atomically renamed, self-checksummed file, and lookups
+    that miss the in-memory host dict reload (and digest-verify) from disk
+    — so materialized bricks survive process death, and `materialize_bricks`
+    in a fresh process skips them.  A reload that fails verification counts
+    a plain miss (the file is dropped) and the brick rematerializes.
     """
 
-    def __init__(self, residency: ResidencyManager):
+    def __init__(self, residency: ResidencyManager, spill=None):
         self.residency = residency
+        self.spill = spill
         self._host: Dict[Tuple, Tuple[np.ndarray, np.ndarray, BrickMeta]] = {}
         self.hits = 0         # serves straight from the device tier
         self.spill_loads = 0  # serves that re-uploaded the host copy
         self.misses = 0       # lookups with no materialized brick at all
         self.spilled = 0      # device replicas dropped under LRU pressure
+        self.disk_loads = 0   # host-tier reloads from the persistent spill
         prev = residency.on_evict
 
         def _count_spill(key: Tuple, entry: ResidentEntry) -> None:
@@ -336,16 +422,45 @@ class BrickStore:
         return len(self._host)
 
     def contains(self, key: Tuple) -> bool:
-        return key in self._host
+        """Whether a verified brick exists (in memory or reloadable).
+
+        The materialization journal check: a disk candidate is loaded and
+        digest-verified *here*, so a corrupted spill file never reports a
+        brick as done — it rematerializes instead.
+        """
+        return key in self._host or self._load_spill(key)
+
+    def _load_spill(self, key: Tuple) -> bool:
+        """Reload ``key`` from the persistent spill into the host tier."""
+        if self.spill is None or key in self._host:
+            return key in self._host
+        got = self.spill.load(key)  # digest-verified; corrupt -> None
+        if got is None:
+            return False
+        coadd, depth, meta = got
+        self._host[key] = (
+            coadd,
+            depth,
+            BrickMeta(
+                partial=bool(meta.get("partial", False)),
+                uncovered_packs=tuple(meta.get("uncovered_packs", ())),
+                files_considered=int(meta.get("files_considered", 0)),
+                files_contributing=int(meta.get("files_contributing", 0)),
+            ),
+        )
+        self.disk_loads += 1
+        return True
 
     def keys(self):
         return self._host.keys()
 
     def meta(self, key: Tuple) -> BrickMeta:
+        self._load_spill(key)
         return self._host[key][2]
 
     def host_arrays(self, key: Tuple) -> Tuple[np.ndarray, np.ndarray]:
         """The host-tier (coadd, depth) copies — test/debug access."""
+        self._load_spill(key)
         coadd, depth, _ = self._host[key]
         return coadd, depth
 
@@ -378,11 +493,26 @@ class BrickStore:
         mosaic immediately without a store lookup (which would miscount a
         fresh insert as a cache hit).
         """
+        m = meta or BrickMeta()
         self._host[key] = (
             np.asarray(coadd, np.float32),
             np.asarray(depth, np.float32),
-            meta or BrickMeta(),
+            m,
         )
+        if self.spill is not None:
+            # Durable write-through (DESIGN.md §8): the brick survives
+            # process death; a crashed materialization resumes past it.
+            self.spill.save(
+                key,
+                self._host[key][0],
+                self._host[key][1],
+                {
+                    "partial": bool(m.partial),
+                    "uncovered_packs": [int(p) for p in m.uncovered_packs],
+                    "files_considered": int(m.files_considered),
+                    "files_contributing": int(m.files_contributing),
+                },
+            )
         return self._acquire(key)
 
     def fetch(self, key: Tuple):
@@ -390,7 +520,7 @@ class BrickStore:
 
         ``tier`` is ``"device"`` (already resident) or ``"host"`` (the
         spill path: the device replica was evicted; serving re-uploads)."""
-        if key not in self._host:
+        if key not in self._host and not self._load_spill(key):
             self.misses += 1
             return None
         was_resident = self.residency.resident(key)
@@ -412,9 +542,11 @@ class BrickStore:
         )
 
     def clear(self) -> None:
-        """Forget every materialized brick, both tiers."""
+        """Forget every materialized brick — all tiers, disk included."""
         self._host.clear()
         self.drop_device()
+        if self.spill is not None:
+            self.spill.clear()
 
 
 @dataclasses.dataclass

@@ -1,0 +1,117 @@
+"""Subprocess worker for the crash-restart drills (NOT a test module).
+
+`tests/test_durable.py` spawns this script, SIGKILLs it at a seeded
+durable-commit stage (via `durable.set_crash_hook`), then re-runs it
+against the same journal directory and asserts bitwise parity with the
+uninterrupted run.  It doubles as the shared factory for the drill
+engines so the parent test process builds *identical* references.
+"""
+import argparse
+import json
+import os
+import signal
+import sys
+
+import numpy as np
+
+from repro.core import CoaddEngine, CoaddQuery, SurveyConfig, make_survey
+from repro.core import durable
+
+# The test_faults chaos archive: 2 streaming windows for QUERY under a
+# 4x-oversubscribed budget, and a 10-brick (brick_deg=0.5) lattice.
+SURVEY_KW = dict(n_runs=2, n_fields=4, n_sources=60, height=16, width=16)
+QUERY_KW = dict(band="r", ra_bounds=(37.2, 37.8), dec_bounds=(-0.5, 0.3),
+                npix=32)
+BRICK_KW = dict(brick_deg=0.5, brick_npix=32)
+
+
+def build_survey():
+    return make_survey(SurveyConfig(**SURVEY_KW))
+
+
+def build_query():
+    return CoaddQuery(**QUERY_KW)
+
+
+def build_engine(survey, journal_dir=None, **kw):
+    """A 4x-oversubscribed streaming engine, optionally durable."""
+    probe = CoaddEngine(survey, pack_capacity=8)
+    ds = probe.exec_dataset("structured")[0]
+    budget = max(ds.chunk_nbytes(0, ds.n_packs) // 4, 1)
+    kw.setdefault("stream_chunk_packs", 2)
+    return CoaddEngine(survey, pack_capacity=8, device_budget_bytes=budget,
+                       fault_backoff_s=1e-4, journal_dir=journal_dir,
+                       **BRICK_KW, **kw)
+
+
+def install_crash(spec: str) -> None:
+    """Arm SIGKILL at the Nth firing of a durable commit stage.
+
+    ``spec`` is ``"<stage>:<ordinal>"`` with stage one of
+    `durable.CRASH_STAGES`; the process dies *at* that point, mid-commit.
+    """
+    stage, ordinal = spec.rsplit(":", 1)
+    ordinal = int(ordinal)
+    if stage not in durable.CRASH_STAGES:
+        raise SystemExit(f"unknown crash stage {stage!r}")
+    seen = {"n": 0}
+
+    def hook(s: str) -> None:
+        if s != stage:
+            return
+        if seen["n"] == ordinal:
+            os.kill(os.getpid(), signal.SIGKILL)
+        seen["n"] += 1
+
+    durable.set_crash_hook(hook)
+
+
+def run_stream(journal_dir: str, method: str):
+    eng = build_engine(build_survey(), journal_dir=journal_dir)
+    res = eng.run(build_query(), method)
+    stats = {
+        "resumed_windows": res.stats.resumed_windows,
+        "windows": res.stats.windows,
+        "dispatches": res.stats.dispatches,
+        "jobs_left": eng.journal_store.jobs(),
+    }
+    return np.asarray(res.coadd), np.asarray(res.depth), stats
+
+
+def run_bricks(journal_dir: str, method: str):
+    eng = build_engine(build_survey(), journal_dir=journal_dir)
+    report = eng.materialize_bricks(bands=("r",), method=method)
+    wq = eng.brick_grid.window_query(0, 2, 0, 2, "r")
+    res = eng.run(wq, method, use_bricks=True)
+    stats = {
+        "resumed_windows": sum(t.resumed_windows for t in report.tasks),
+        "completed": report.completed,
+        "skipped": report.skipped,
+        "n_bricks": len(report.tasks),
+        "disk_loads": eng.brick_store.disk_loads,
+        "bricks_served": res.stats.bricks_hit + res.stats.bricks_spilled,
+        "jobs_left": eng.journal_store.jobs(),
+    }
+    return np.asarray(res.coadd), np.asarray(res.depth), stats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--journal-dir", required=True)
+    ap.add_argument("--out", required=True, help="npz output path")
+    ap.add_argument("--mode", choices=("stream", "bricks"), default="stream")
+    ap.add_argument("--method", default="sql_structured")
+    ap.add_argument("--crash", default=None, help="stage:ordinal SIGKILL seed")
+    args = ap.parse_args(argv)
+    if args.crash:
+        install_crash(args.crash)
+    runner = run_stream if args.mode == "stream" else run_bricks
+    coadd, depth, stats = runner(args.journal_dir, args.method)
+    np.savez(args.out, coadd=coadd, depth=depth)
+    with open(args.out + ".json", "w") as fh:
+        json.dump(stats, fh)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

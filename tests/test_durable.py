@@ -1,0 +1,632 @@
+"""Durable fault domain drills (DESIGN.md §8): crash-safe journals,
+persistent brick store, and process-death recovery.
+
+Three layers of proof:
+
+* **Unit**: `DiskJournal` / `JournalStore` / `BrickSpill` commit atomically,
+  replay valid prefixes of corrupted files, and never report a record whose
+  payload does not hash back to its manifest digest.
+* **In-process chaos**: a killed streaming query leaves an on-disk journal
+  that a *fresh engine* resumes bitwise — even after the journal is
+  truncated, bit-flipped, or digest-mismatched under it.
+* **Process death**: `durable_worker.py` subprocesses SIGKILL themselves at
+  seeded commit stages (including mid-segment-write); a restarted process
+  replays the journal and must match the uninterrupted run bitwise with
+  ``resumed_windows > 0``.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChaosInjector,
+    CoaddEngine,
+    FaultSchedule,
+    METHODS,
+    QueryKilled,
+    ResidencyManager,
+    ScanWindow,
+    WindowTracker,
+    make_survey,
+    SurveyConfig,
+)
+from repro.core.durable import BrickSpill, DiskJournal, JournalStore
+
+import durable_worker as dw
+
+REPO = Path(__file__).resolve().parents[1]
+WORKER = Path(dw.__file__).resolve()
+QUERY = dw.build_query()
+
+
+@pytest.fixture(scope="module")
+def survey():
+    return dw.build_survey()
+
+
+_REFS = {}
+
+
+def _reference(survey, method):
+    """The uninterrupted in-process run (no journal dir): the parity oracle.
+
+    CPU jit execution is cross-process deterministic, so the subprocess
+    drills compare against this without a reference subprocess.
+    """
+    if method not in _REFS:
+        _REFS[method] = dw.build_engine(survey).run(QUERY, method)
+    return _REFS[method]
+
+
+def _run_worker(args, expect_kill=False, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(WORKER), *args],
+        cwd=str(REPO), env=env, capture_output=True, text=True,
+        timeout=timeout,
+    )
+    if expect_kill:
+        assert proc.returncode == -signal.SIGKILL, (
+            f"worker exited {proc.returncode}, expected SIGKILL\n{proc.stderr}"
+        )
+    else:
+        assert proc.returncode == 0, proc.stderr
+    return proc
+
+
+def _load_out(out):
+    with np.load(out) as z:
+        coadd, depth = z["coadd"], z["depth"]
+    with open(str(out) + ".json") as fh:
+        stats = json.load(fh)
+    return coadd, depth, stats
+
+
+# ===== DiskJournal / JournalStore units =====================================
+
+def _parts(seed, n=2):
+    rng = np.random.default_rng(seed)
+    return tuple(rng.normal(size=(3, 3)).astype(np.float32) for _ in range(n))
+
+
+def _fill(root, n=3):
+    j = DiskJournal(root)
+    keys = [(i, i + 1, 2, 4) for i in range(n)]
+    for i, k in enumerate(keys):
+        j[k] = _parts(i)
+    j.close()
+    return keys
+
+
+def test_disk_journal_roundtrip(tmp_path):
+    keys = _fill(tmp_path, n=3)
+    j = DiskJournal(tmp_path)
+    assert len(j) == 3 and j.dropped_records == 0
+    for i, k in enumerate(keys):
+        assert k in j
+        got = j[k]
+        for a, b in zip(got, _parts(i)):
+            np.testing.assert_array_equal(a, b)
+    assert (9, 9, 9, 9) not in j
+    j.close()
+
+
+def test_disk_journal_truncated_tail_segment(tmp_path):
+    """A torn final payload write replays the valid prefix, never crashes."""
+    keys = _fill(tmp_path, n=3)
+    seg = tmp_path / DiskJournal.SEGMENT
+    seg.write_bytes(seg.read_bytes()[:-5])
+    j = DiskJournal(tmp_path)
+    assert sorted(j.keys()) == keys[:2]
+    assert j.dropped_records == 1
+    # The tail was truncated away: appends go to a consistent offset and a
+    # re-replay sees the new record.
+    j[(7, 8, 2, 4)] = _parts(7)
+    j.close()
+    j2 = DiskJournal(tmp_path)
+    assert sorted(j2.keys()) == sorted(keys[:2] + [(7, 8, 2, 4)])
+    assert j2.dropped_records == 0
+    j2.close()
+
+
+def test_disk_journal_truncated_manifest_line(tmp_path):
+    keys = _fill(tmp_path, n=3)
+    man = tmp_path / DiskJournal.MANIFEST
+    raw = man.read_bytes()
+    man.write_bytes(raw[: len(raw) - 10])  # tear the last jsonl line
+    j = DiskJournal(tmp_path)
+    assert sorted(j.keys()) == keys[:2]
+    j.close()
+
+
+def test_disk_journal_bitflip_payload(tmp_path):
+    """A flipped byte in record 1's payload drops it AND its suffix: replay
+    is a valid *prefix*, never a subset with holes."""
+    keys = _fill(tmp_path, n=3)
+    man = tmp_path / DiskJournal.MANIFEST
+    off = json.loads(man.read_bytes().splitlines()[1])["off"]
+    seg = tmp_path / DiskJournal.SEGMENT
+    raw = bytearray(seg.read_bytes())
+    raw[off + 12] ^= 0xFF
+    seg.write_bytes(bytes(raw))
+    j = DiskJournal(tmp_path)
+    assert sorted(j.keys()) == keys[:1]
+    assert j.dropped_records == 2
+    j.close()
+
+
+def test_disk_journal_manifest_payload_mismatch(tmp_path):
+    """A manifest digest that no longer matches its payload is dropped."""
+    keys = _fill(tmp_path, n=3)
+    man = tmp_path / DiskJournal.MANIFEST
+    lines = man.read_bytes().splitlines(keepends=True)
+    rec = json.loads(lines[-1])
+    rec["sha"] = "0" * 64
+    lines[-1] = (json.dumps(rec) + "\n").encode()
+    man.write_bytes(b"".join(lines))
+    j = DiskJournal(tmp_path)
+    assert sorted(j.keys()) == keys[:2]
+    assert j.dropped_records == 1
+    j.close()
+
+
+def test_journal_store_open_remove_jobs(tmp_path):
+    store = JournalStore(tmp_path)
+    j = store.open("job-abc")
+    j[(0, 1, 1, 2)] = _parts(0)
+    j.close()
+    assert store.exists("job-abc")
+    assert store.jobs() == ["job-abc"[:32]]
+    assert store.remove("job-abc")
+    assert store.jobs() == [] and not store.exists("job-abc")
+    assert not store.remove("job-abc")  # idempotent
+    store.drain_tombs()  # deletion is async; wait for the reaper
+    assert not list(Path(tmp_path).glob("*.gc.*"))  # tombs reaped
+
+
+def test_journal_store_sweeps_stale_orphans(tmp_path):
+    store = JournalStore(tmp_path, max_age_s=3600.0)
+    store.open("job-old").close()
+    store.open("job-new").close()
+    old_dir = tmp_path / "job-old"
+    past = time.time() - 7200.0
+    os.utime(old_dir, (past, past))
+    store2 = JournalStore(tmp_path, max_age_s=3600.0)
+    assert store2.swept == 1
+    assert store2.jobs() == ["job-new"]
+    assert not old_dir.exists()
+
+
+# ===== BrickSpill units =====================================================
+
+def _brick_payload(seed=3):
+    rng = np.random.default_rng(seed)
+    coadd = rng.normal(size=(8, 8)).astype(np.float32)
+    depth = rng.integers(0, 5, size=(8, 8)).astype(np.float32)
+    meta = {"partial": False, "uncovered_packs": [], "files_considered": 7,
+            "files_contributing": 5}
+    return coadd, depth, meta
+
+
+def test_brick_spill_roundtrip(tmp_path):
+    spill = BrickSpill(tmp_path)
+    key = ("brick", "r", 0, 1, ("psf", 1.25))
+    coadd, depth, meta = _brick_payload()
+    spill.save(key, coadd, depth, meta)
+    assert spill.contains(key)
+    got = spill.load(key)
+    assert got is not None
+    np.testing.assert_array_equal(got[0], coadd)
+    np.testing.assert_array_equal(got[1], depth)
+    assert got[2] == meta
+    spill.delete(key)
+    assert spill.load(key) is None and spill.corrupt_drops == 0
+
+
+@pytest.mark.parametrize("damage", ["bitflip", "truncate", "garbage"])
+def test_brick_spill_corruption_is_a_miss(tmp_path, damage):
+    spill = BrickSpill(tmp_path)
+    key = ("brick", "r", 2, 2, ())
+    spill.save(key, *_brick_payload())
+    path = spill._path(key)
+    raw = bytearray(path.read_bytes())
+    if damage == "bitflip":
+        raw[len(raw) // 2] ^= 0xFF
+    elif damage == "truncate":
+        raw = raw[: len(raw) // 2]
+    else:
+        raw = bytearray(b"not an npz at all")
+    path.write_bytes(bytes(raw))
+    assert spill.load(key) is None       # bad digest -> miss, not a crash
+    assert spill.corrupt_drops == 1
+    assert not path.exists()             # the corpse is reaped
+    assert not spill.contains(key)
+
+
+# ===== in-process crash + corruption recovery ===============================
+
+def _killed_durable_engine(survey, jd, method="sql_structured"):
+    """Run QUERY under a kill-after-1-window injector with a disk journal;
+    return the surviving on-disk job directory."""
+    inj = ChaosInjector(FaultSchedule(kill_after_windows=1))
+    eng = dw.build_engine(survey, journal_dir=str(jd), fault_injector=inj)
+    with pytest.raises(QueryKilled):
+        eng.run(QUERY, method)
+    jobs = eng.journal_store.jobs()
+    assert len(jobs) == 1
+    return jd / "windows" / jobs[0]
+
+
+def test_fresh_engine_resumes_disk_journal_bitwise(survey, tmp_path):
+    method = "sql_structured"
+    ref = _reference(survey, method)
+    _killed_durable_engine(survey, tmp_path, method)
+    eng2 = dw.build_engine(survey, journal_dir=str(tmp_path))
+    r = eng2.run(QUERY, method)
+    assert r.stats.resumed_windows == 1
+    assert r.stats.dispatches == r.stats.windows - 1
+    np.testing.assert_array_equal(r.coadd, ref.coadd)
+    np.testing.assert_array_equal(r.depth, ref.depth)
+    assert eng2.journal_store.jobs() == []  # clean exit GC'd the job
+
+
+@pytest.mark.parametrize("damage", ["truncate", "bitflip", "sha"])
+def test_corrupted_journal_degrades_to_reexecution(survey, tmp_path, damage):
+    """Corruption under the journal re-dispatches the lost windows — the
+    answer stays bitwise; only the resume accounting degrades."""
+    method = "sql_structured"
+    ref = _reference(survey, method)
+    job_dir = _killed_durable_engine(survey, tmp_path, method)
+    seg = job_dir / DiskJournal.SEGMENT
+    man = job_dir / DiskJournal.MANIFEST
+    if damage == "truncate":
+        seg.write_bytes(seg.read_bytes()[:-3])
+    elif damage == "bitflip":
+        raw = bytearray(seg.read_bytes())
+        raw[len(raw) // 2] ^= 0x10
+        seg.write_bytes(bytes(raw))
+    else:
+        rec = json.loads(man.read_bytes().splitlines()[0])
+        rec["sha"] = "f" * 64
+        man.write_bytes((json.dumps(rec) + "\n").encode())
+    eng2 = dw.build_engine(survey, journal_dir=str(tmp_path))
+    r = eng2.run(QUERY, method)
+    assert r.stats.resumed_windows == 0      # the one journaled window died
+    assert r.stats.dispatches == r.stats.windows
+    np.testing.assert_array_equal(r.coadd, ref.coadd)
+    np.testing.assert_array_equal(r.depth, ref.depth)
+    assert eng2.journal_store.jobs() == []
+
+
+def test_durable_clean_run_is_bitwise_and_leaves_nothing(survey, tmp_path):
+    method = "raw_fits_prefiltered"
+    ref = _reference(survey, method)
+    eng = dw.build_engine(survey, journal_dir=str(tmp_path))
+    r = eng.run(QUERY, method)
+    np.testing.assert_array_equal(r.coadd, ref.coadd)
+    np.testing.assert_array_equal(r.depth, ref.depth)
+    assert eng.journal_store.jobs() == []
+    assert not list((tmp_path / "windows").glob("*.tmp.*"))
+
+
+def test_engine_init_sweeps_stale_window_journals(survey, tmp_path):
+    eng = dw.build_engine(survey, journal_dir=str(tmp_path))
+    eng.journal_store.open("orphan-job").close()
+    orphan = tmp_path / "windows" / "orphan-job"
+    past = time.time() - 8 * 86400.0
+    os.utime(orphan, (past, past))
+    eng2 = dw.build_engine(survey, journal_dir=str(tmp_path))
+    assert eng2.journal_store.swept == 1
+    assert not orphan.exists()
+
+
+# ===== persistent brick store ===============================================
+
+def test_brick_store_persists_across_engines(survey, tmp_path):
+    # chunk_packs=1: the accumulation grouping of per-brick jobs matches the
+    # fresh window scan, so parity with `run_window` is bitwise (PR 7 idiom).
+    eng = dw.build_engine(survey, journal_dir=str(tmp_path),
+                          stream_chunk_packs=1)
+    rep = eng.materialize_bricks(bands=("r",))
+    n = len(rep.tasks)
+    assert rep.completed == n and n > 0
+    wq = eng.brick_grid.window_query(0, 2, 0, 2, "r")
+    served = eng.run(wq, "sql_structured", use_bricks=True)
+    baseline = eng.run_window(wq, "sql_structured")
+
+    eng2 = dw.build_engine(survey, journal_dir=str(tmp_path),
+                           stream_chunk_packs=1)
+    rep2 = eng2.materialize_bricks(bands=("r",))
+    assert rep2.skipped == n and rep2.completed == 0   # all served from disk
+    assert eng2.brick_store.disk_loads == n
+    served2 = eng2.run(wq, "sql_structured", use_bricks=True)
+    assert served2.stats.bricks_hit + served2.stats.bricks_spilled == 4
+    np.testing.assert_array_equal(served2.coadd, served.coadd)
+    np.testing.assert_array_equal(served2.coadd, baseline.coadd)
+    np.testing.assert_array_equal(served2.depth, baseline.depth)
+
+
+def test_corrupt_spilled_brick_rematerializes(survey, tmp_path):
+    eng = dw.build_engine(survey, journal_dir=str(tmp_path),
+                          stream_chunk_packs=1)
+    rep = eng.materialize_bricks(bands=("r",))
+    n = len(rep.tasks)
+    files = sorted((tmp_path / "bricks").glob("brick-*.npz"))
+    assert len(files) == n
+    raw = bytearray(files[0].read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    files[0].write_bytes(bytes(raw))
+
+    eng2 = dw.build_engine(survey, journal_dir=str(tmp_path),
+                           stream_chunk_packs=1)
+    rep2 = eng2.materialize_bricks(bands=("r",))
+    assert rep2.skipped == n - 1 and rep2.completed == 1
+    assert eng2.brick_store.spill.corrupt_drops == 1
+    wq = eng2.brick_grid.window_query(0, 2, 0, 2, "r")
+    served = eng2.run(wq, "sql_structured", use_bricks=True)
+    baseline = eng2.run_window(wq, "sql_structured")
+    np.testing.assert_array_equal(served.coadd, baseline.coadd)
+    np.testing.assert_array_equal(served.depth, baseline.depth)
+
+
+# ===== SIGKILL process-death drills =========================================
+
+FAST_KILL_METHODS = ("sql_structured", "raw_fits_prefiltered")
+SLOW_KILL_METHODS = tuple(m for m in METHODS if m not in FAST_KILL_METHODS)
+
+
+def _stream_drill(survey, tmp_path, method, crash):
+    ref = _reference(survey, method)
+    jd, out = tmp_path / "journal", tmp_path / "out.npz"
+    base = ["--journal-dir", str(jd), "--out", str(out), "--method", method]
+    _run_worker(base + ["--crash", crash], expect_kill=True)
+    assert not out.exists()                     # it really died mid-job
+    store = JournalStore(jd / "windows")
+    assert store.jobs(), "no journal survived the kill"
+    _run_worker(base)                           # fresh process, same journal
+    coadd, depth, stats = _load_out(out)
+    assert stats["resumed_windows"] >= 1
+    assert stats["dispatches"] == stats["windows"] - stats["resumed_windows"]
+    assert stats["jobs_left"] == []
+    np.testing.assert_array_equal(coadd, np.asarray(ref.coadd))
+    np.testing.assert_array_equal(depth, np.asarray(ref.depth))
+
+
+@pytest.mark.parametrize("method", FAST_KILL_METHODS)
+def test_sigkill_streaming_resumes_bitwise(survey, tmp_path, method):
+    """SIGKILL after the first window commits; a fresh process replays it."""
+    _stream_drill(survey, tmp_path, method, "manifest_done:0")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", SLOW_KILL_METHODS)
+def test_sigkill_streaming_resumes_bitwise_slow(survey, tmp_path, method):
+    _stream_drill(survey, tmp_path, method, "manifest_done:0")
+
+
+def test_sigkill_mid_segment_write(survey, tmp_path):
+    """Death *inside* the second window's payload write: the torn tail is
+    truncated on replay and only window 0 resumes from the journal."""
+    _stream_drill(survey, tmp_path, "sql_structured", "payload_mid:1")
+
+
+def test_sigkill_after_payload_before_manifest(survey, tmp_path):
+    """Death between payload append and manifest append: the record was
+    never committed, so it re-executes (atomicity of the commit point)."""
+    _stream_drill(survey, tmp_path, "sql_structured", "payload_done:1")
+
+
+def test_sigkill_during_materialize_resumes(survey, tmp_path):
+    """SIGKILL mid-materialization: finished bricks skip, the in-flight
+    brick resumes from its window journal, the mosaic stays bitwise."""
+    jd, out = tmp_path / "journal", tmp_path / "out.npz"
+    base = ["--journal-dir", str(jd), "--out", str(out), "--mode", "bricks"]
+    _run_worker(base + ["--crash", "brick_done:1"], expect_kill=True)
+    spilled = list((jd / "bricks").glob("brick-*.npz"))
+    assert len(spilled) >= 1                    # at least one brick durable
+    _run_worker(base)
+    coadd, depth, stats = _load_out(out)
+    assert stats["skipped"] >= 1
+    assert stats["skipped"] + stats["completed"] == stats["n_bricks"]
+    assert stats["jobs_left"] == []
+
+    clean = tmp_path / "clean.npz"
+    _run_worker(["--journal-dir", str(tmp_path / "j2"), "--out", str(clean),
+                 "--mode", "bricks"])
+    ref_coadd, ref_depth, _ = _load_out(clean)
+    np.testing.assert_array_equal(coadd, ref_coadd)
+    np.testing.assert_array_equal(depth, ref_depth)
+
+
+@pytest.mark.slow
+def test_sigkill_during_materialize_window_journal_resumes(survey, tmp_path):
+    """Kill at a *window* commit inside some brick's streaming job: the
+    restarted job must show window-journal replay (resumed_windows > 0)."""
+    jd, out = tmp_path / "journal", tmp_path / "out.npz"
+    base = ["--journal-dir", str(jd), "--out", str(out), "--mode", "bricks"]
+    _run_worker(base + ["--crash", "manifest_done:2"], expect_kill=True)
+    store = JournalStore(jd / "windows")
+    assert store.jobs(), "the in-flight brick left no window journal"
+    _run_worker(base)
+    coadd, depth, stats = _load_out(out)
+    assert stats["resumed_windows"] >= 1
+    assert stats["skipped"] + stats["completed"] == stats["n_bricks"]
+    clean = tmp_path / "clean.npz"
+    _run_worker(["--journal-dir", str(tmp_path / "j2"), "--out", str(clean),
+                 "--mode", "bricks"])
+    ref_coadd, ref_depth, _ = _load_out(clean)
+    np.testing.assert_array_equal(coadd, ref_coadd)
+    np.testing.assert_array_equal(depth, ref_depth)
+
+
+# ===== quarantine auto-release ==============================================
+
+def test_residency_reverify_releases_repaired_packs():
+    res = ResidencyManager()
+
+    class HostDS:
+        def __init__(self):
+            rng = np.random.default_rng(11)
+            self.pixels = rng.normal(size=(4, 2, 4, 4)).astype(np.float32)
+
+    ds = HostDS()
+    import hashlib
+    digests = [hashlib.sha256(np.ascontiguousarray(ds.pixels[p]).tobytes())
+               .digest() for p in range(4)]
+    saved = ds.pixels[1].copy()
+    ds.pixels[1, 0, 0, 0] = np.nan      # poisoned
+    ds.pixels[2, 0, 0, 0] += 1.0        # finite but not the ingested bytes
+    res.quarantine_packs("structured", [1, 2], digests)
+    assert res.quarantined_packs("structured") == frozenset({1, 2})
+    assert res.reverify_quarantined("structured", ds) == []   # nothing healed
+    ds.pixels[1] = saved
+    assert res.reverify_quarantined("structured", ds) == [1]  # 1 healed, 2 not
+    assert res.quarantined_packs("structured") == frozenset({2})
+    assert res.quarantine_released == 1
+    ds.pixels[2, 0, 0, 0] -= 1.0
+    assert res.reverify_quarantined("structured", ds) == [2]
+    assert res.quarantine_released == 2
+    assert res.quarantined == {}        # empty layouts leave the registry
+
+
+def test_reverify_without_reference_digest_uses_finiteness():
+    res = ResidencyManager()
+
+    class HostDS:
+        pixels = None
+
+    ds = HostDS()
+    ds.pixels = np.ones((2, 1, 2, 2), np.float32)
+    ds.pixels[0, 0, 0, 0] = np.inf
+    res.quarantine_packs("structured", [0, 1])   # no digests recorded
+    assert res.reverify_quarantined("structured", ds) == [1]
+    ds.pixels[0, 0, 0, 0] = 0.0
+    assert res.reverify_quarantined("structured", ds) == [0]
+
+
+def test_engine_quarantine_release_restores_full_coverage(survey):
+    """End to end: real host corruption quarantines persistently across
+    queries; repairing the bytes + `reverify_quarantined` releases the pack
+    and the next query completes full-coverage, bitwise with clean."""
+    method = "sql_structured"
+    ref = _reference(survey, method)
+    eng = dw.build_engine(survey, on_fault="quarantine", verify_digests=True)
+    plan = eng.plan(QUERY, method)
+    exec_ds, _ = eng.exec_dataset(plan.layout)
+    exec_ds.pack_digests()              # prime the reference digests
+    gate = eng._exec_gate(plan)
+    bad = int(np.nonzero(np.asarray(gate).any(axis=1))[0][0])
+    saved = exec_ds.pixels[bad].copy()
+    exec_ds.pixels[bad, ...] = np.nan   # persistent host corruption
+
+    r1 = eng.run(QUERY, method)
+    assert r1.stats.partial and bad in r1.stats.uncovered_packs
+    assert bad in eng.residency.quarantined_packs(plan.layout)
+    r2 = eng.run(QUERY, method)         # persists: pre-gated, still partial
+    assert r2.stats.partial and r2.stats.quarantined_packs == 0
+
+    assert eng.reverify_quarantined(plan.layout) == []  # still poisoned
+    exec_ds.pixels[bad] = saved                         # repair the host
+    assert eng.reverify_quarantined(plan.layout) == [bad]
+    assert eng.residency.quarantined_packs(plan.layout) == frozenset()
+
+    r3 = eng.run(QUERY, method)
+    assert not r3.stats.partial
+    assert r3.stats.requarantine_released == 1
+    assert r3.stats.uncovered_packs == ()
+    np.testing.assert_array_equal(r3.coadd, ref.coadd)
+    np.testing.assert_array_equal(r3.depth, ref.depth)
+    r4 = eng.run(QUERY, method)
+    assert r4.stats.requarantine_released == 0  # the counter is one-shot
+
+
+# ===== concurrent speculation ===============================================
+
+def _mkwin(k):
+    return ScanWindow(start=k, stop=k + 1, sel=np.array([k]),
+                      pack_idx=np.zeros(1, np.int32), n_gated=1, budget=1)
+
+
+def test_concurrent_backup_does_not_serialize_the_run():
+    """The regression the satellite demands: a straggler's backup runs on a
+    worker thread, so the main loop reaches *later* windows while the
+    backup is still in flight.  The backup here refuses to finish until a
+    later window's primary dispatch has started — under the old serialized
+    speculation this deadlocks (and times out); concurrently it passes."""
+    later_started = threading.Event()
+    saw = {"later_window_ran_during_backup": False}
+    windows = [_mkwin(k) for k in range(4)]
+    calls = {}
+
+    def acquire(win, drop):
+        return None
+
+    def dispatch(ops, win, drop):
+        n = calls.get(win.key, 0)
+        calls[win.key] = n + 1
+        if win.key == windows[2].key:
+            later_started.set()
+        if win.key == windows[1].key:
+            if n == 0:
+                time.sleep(0.25)        # the straggling primary
+            else:
+                # the backup: wait for proof the main loop moved on
+                saw["later_window_ran_during_backup"] = later_started.wait(10.0)
+        return (np.ones(2, np.float32),)
+
+    tr = WindowTracker(straggler_factor=3.0, straggler_min_windows=1,
+                       backoff_s=1e-4)
+    acc, quar = tr.run(windows, acquire, dispatch, {})
+    assert quar == []
+    assert tr.counters.speculative_windows >= 1
+    assert calls[windows[1].key] == 2
+    assert saw["later_window_ran_during_backup"], (
+        "backup thread blocked the main loop (speculation is serialized)"
+    )
+    np.testing.assert_array_equal(acc[0], np.full(2, 4.0, np.float32))
+
+
+def test_serialized_speculation_mode_still_available():
+    windows = [_mkwin(k) for k in range(3)]
+
+    def dispatch(ops, win, drop):
+        if win.key == windows[1].key:
+            time.sleep(0.1)
+        return (np.ones(1, np.float32),)
+
+    tr = WindowTracker(straggler_factor=3.0, straggler_min_windows=1,
+                       concurrent_speculation=False)
+    acc, _ = tr.run(windows, lambda w, d: None, dispatch, {})
+    assert tr.counters.speculative_windows >= 1
+    assert tr._backups == []            # nothing ever went to a thread
+    np.testing.assert_array_equal(acc[0], np.full(1, 3.0, np.float32))
+
+
+def test_engine_speculation_concurrent_by_default_bitwise(survey):
+    """Straggler speculation under the real engine (slow-window injector):
+    concurrent backups keep bitwise parity and digest agreement."""
+    method = "sql_structured"
+    # Single-pack chunks force enough windows for a duration median.
+    eng0 = dw.build_engine(survey, stream_chunk_packs=1)
+    plan = eng0.plan(QUERY, method)
+    exec_ds, _ = eng0.exec_dataset(plan.layout)
+    gate = np.asarray(eng0._exec_gate(plan))
+    n_windows = len(eng0._stream_windows(exec_ds, gate.any(axis=1)))
+    assert n_windows >= 3
+    ref = eng0.run(QUERY, method)
+    inj = ChaosInjector(FaultSchedule(slow_windows={n_windows - 1: 0.05}))
+    eng = dw.build_engine(survey, stream_chunk_packs=1, fault_injector=inj,
+                          straggler_factor=3.0)
+    r = eng.run(QUERY, method)
+    np.testing.assert_array_equal(r.coadd, ref.coadd)
+    np.testing.assert_array_equal(r.depth, ref.depth)
+    assert r.stats.speculative_windows >= 1
