@@ -167,6 +167,8 @@ def bench_coadd_engine(out_path: str = "BENCH_coadd.json",
     rows += durable_rows
     brick_rows, bricks = _bench_bricks(repeats=repeats)
     rows += brick_rows
+    serving_rows, serving = _bench_serving(repeats=repeats)
+    rows += serving_rows
     payload = {
         "npix": QUERY_LARGE.npix,
         "n_images": eng.dataset("per_file").n_packs,
@@ -179,6 +181,7 @@ def bench_coadd_engine(out_path: str = "BENCH_coadd.json",
         "fault_overhead": fault_overhead,
         "durable_overhead": durable_overhead,
         "bricks": bricks,
+        "serving": serving,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -567,6 +570,124 @@ def _bench_bricks(repeats: int = 1) -> tuple:
         "materialize_s": materialize_s,
         "rows": out_rows,
     }
+    return rows, rec
+
+
+def _bench_serving(repeats: int = 1,
+                   concurrencies=(1, 4, 16)) -> tuple:
+    """Queries/sec under concurrency through `CoaddService` (DESIGN.md §10).
+
+    The workload is the multi-tenant repeat traffic the serving layer
+    exists for: at each concurrency C, clients draw from a small pool of
+    distinct same-layout queries with popularity skew.  Three passes per C:
+
+    * **serial** — the same C requests one at a time through bare
+      ``engine.run`` (no batching, no cache): the pre-service baseline.
+    * **cold** — a fresh service, empty result cache: wins come from
+      coalescing the burst into one vmapped dispatch and singleflight-
+      merging identical in-flight requests.
+    * **warm** — the identical burst replayed on the same service: result
+      cache hits, the Kolosov ingest-once/serve-forever regime.
+
+    The burst is queued before the dispatcher starts (the recorded-burst
+    replay pattern), so the coalesce grouping — and therefore which batch
+    programs compile during warmup — is deterministic.  `perf_gate.py
+    --serve-threshold` requires cold >= 2x serial queries/sec at C=16
+    with zero shed.
+    """
+    import asyncio
+    import statistics
+
+    from benchmarks.paper_tables import get_survey
+    from repro.core import CoaddEngine, CoaddQuery
+    from repro.core.serve import CoaddService
+
+    sv = get_survey()
+    eng = CoaddEngine(sv, pack_capacity=64)
+    method = "sql_structured"
+    pool = []
+    for i in range(4):
+        lo = 37.6 + 0.18 * i
+        pool.append(CoaddQuery(band="r", ra_bounds=(lo, lo + 0.35),
+                               dec_bounds=(-0.25, 0.2), npix=64))
+    rng = np.random.default_rng(820)
+    w = 1.0 / np.arange(1, len(pool) + 1)
+    bursts = {
+        c: [pool[int(i)] for i in
+            rng.choice(len(pool), size=c, p=w / w.sum())]
+        for c in concurrencies
+    }
+
+    async def burst(svc, queries):
+        tasks = [asyncio.ensure_future(svc.submit(q, method))
+                 for q in queries]
+        # Wait until every request is either queued or already answered
+        # (cache hits on warm passes never enqueue), then dispatch.
+        while svc.queue_depth + sum(t.done() for t in tasks) < len(queries):
+            await asyncio.sleep(0.001)
+        async with svc:
+            await asyncio.gather(*tasks)
+
+    def service_pass(queries, svc=None):
+        svc = svc or CoaddService(eng, method=method, max_queue=64,
+                                  max_batch=max(concurrencies))
+        t0 = time.perf_counter()
+        asyncio.run(burst(svc, queries))
+        return svc, time.perf_counter() - t0
+
+    for q in pool:                      # warm the single-program jits
+        eng.run(q, method)
+    for c, queries in bursts.items():   # warm the batch-program jits
+        service_pass(queries)
+
+    rows: List[str] = []
+    rec: Dict[str, Dict] = {"pool": len(pool), "npix": 64,
+                            "method": method, "concurrency": {}}
+    n = max(3, repeats)
+    for c, queries in bursts.items():
+        ts_serial, ts_cold, ts_warm = [], [], []
+        snap = None
+        for _ in range(n):
+            t0 = time.perf_counter()
+            for q in queries:
+                eng.run(q, method)
+            ts_serial.append(time.perf_counter() - t0)
+            svc, dt_cold = service_pass(queries)
+            ts_cold.append(dt_cold)
+            snap = svc.stats.snapshot()  # cold-pass telemetry only
+            _, dt_warm = service_pass(queries, svc=svc)
+            ts_warm.append(dt_warm)
+            snap_warm = svc.stats.snapshot()  # cumulative incl. warm hits
+        t_serial = statistics.median(ts_serial)
+        t_cold = statistics.median(ts_cold)
+        t_warm = statistics.median(ts_warm)
+        entry = {
+            "clients": c,
+            "qps_serial": c / t_serial,
+            "qps_cold": c / t_cold,
+            "qps_warm": c / t_warm,
+            "speedup_cold": t_serial / t_cold,
+            "speedup_warm": t_serial / t_warm,
+            "p95_cold_ms": snap["p95_ms"],
+            "coalesce_factor": snap["coalesce_factor"],
+            "merged_inflight": snap["merged_inflight"],
+            "cache_hits": snap_warm["cache_hits"],
+            "shed": (snap_warm["shed_queue_full"]
+                     + snap_warm["shed_tenant_cap"]),
+        }
+        rec["concurrency"][str(c)] = entry
+        rows.append(
+            f"coadd/serving/c{c}/cold,{t_cold*1e6/c:.0f},"
+            f"qps={entry['qps_cold']:.1f};serial={entry['qps_serial']:.1f};"
+            f"speedup={entry['speedup_cold']:.2f}x;"
+            f"coalesce={entry['coalesce_factor']:.1f}"
+        )
+        rows.append(
+            f"coadd/serving/c{c}/warm,{t_warm*1e6/c:.0f},"
+            f"qps={entry['qps_warm']:.1f};"
+            f"speedup={entry['speedup_warm']:.2f}x;"
+            f"cache_hits={entry['cache_hits']}"
+        )
     return rows, rec
 
 

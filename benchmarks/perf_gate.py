@@ -23,7 +23,11 @@ in-memory run, bitwise-equal, with zero journal jobs left after a clean
 exit.  Likewise the brick rows (``bricks`` in the report) are gated
 absolutely at ``--brick-threshold`` (default 3.0x): warm brick-served
 queries must beat the brick-free fresh scan by at least that factor, with
-bitwise-identical results.
+bitwise-identical results.  The serving rows (``serving``) are gated
+absolutely at ``--serve-threshold`` (default 2.0x): at the highest
+measured concurrency a cache-cold `CoaddService` must answer the client
+burst at that multiple of the serial engine.run queries/sec, with zero
+shed and the cache-warm replay never slower than cold.
 
   python -m benchmarks.perf_gate --current BENCH_coadd.json \
       [--baseline path.json] [--history old_trajectory.jsonl] \
@@ -182,6 +186,50 @@ def brick_gate(current: Dict, threshold: float) -> Tuple[List[str], List[str]]:
     return regressions, lines
 
 
+def serve_gate(current: Dict, threshold: float) -> Tuple[List[str], List[str]]:
+    """Absolute gate on serving throughput under concurrency (DESIGN.md §10).
+
+    The serial baseline and the coalesced service passes ran side by side
+    in the same --quick invocation, so no baseline artifact is needed.  At
+    the highest measured concurrency, a cache-cold service must answer the
+    skewed client burst at >= ``threshold`` x the serial queries/sec
+    (coalescing + singleflight merging is the win), with zero requests
+    shed below the admission limit; the cache-warm replay must never fall
+    below the cold pass.
+    """
+    rec = current.get("serving")
+    if not rec or not rec.get("concurrency"):
+        return [], ["  serving: no rows (old artifact?)"]
+    regressions: List[str] = []
+    lines: List[str] = []
+    top = str(max(int(c) for c in rec["concurrency"]))
+    for c, row in sorted(rec["concurrency"].items(), key=lambda kv: int(kv[0])):
+        gated = c == top and int(c) > 1
+        lines.append(
+            f"  serving/c{c}: cold {row['qps_cold']:.1f} qps vs serial "
+            f"{row['qps_serial']:.1f} ({row['speedup_cold']:.2f}x"
+            f"{f', gate >= {threshold:.2f}x' if gated else ''}), "
+            f"warm {row['qps_warm']:.1f} qps, "
+            f"coalesce {row['coalesce_factor']:.1f}, shed {row['shed']}"
+        )
+        if gated and float(row["speedup_cold"]) < threshold:
+            regressions.append(
+                f"serving/c{c}: coalesced throughput only "
+                f"{row['speedup_cold']:.2f}x serial (< {threshold:.2f}x)"
+            )
+        if row.get("shed", 0):
+            regressions.append(
+                f"serving/c{c}: {row['shed']} request(s) shed below the "
+                f"admission limit"
+            )
+        if float(row["qps_warm"]) < float(row["qps_cold"]):
+            regressions.append(
+                f"serving/c{c}: cache-warm replay slower than cold "
+                f"({row['qps_warm']:.1f} < {row['qps_cold']:.1f} qps)"
+            )
+    return regressions, lines
+
+
 def trajectory_row(current: Dict, sha: str, ref: str) -> Dict:
     """One compact history row: us/image per row + the streaming headline."""
     row = {
@@ -203,6 +251,17 @@ def trajectory_row(current: Dict, sha: str, ref: str) -> Dict:
         row["brick_speedups"] = {
             f"{r['method']}/k{r['k']}": r.get("speedup")
             for r in bricks["rows"]
+        }
+    serving = current.get("serving")
+    if serving and serving.get("concurrency"):
+        row["serving"] = {
+            f"c{c}": {
+                "qps_cold": r.get("qps_cold"),
+                "speedup_cold": r.get("speedup_cold"),
+                "speedup_warm": r.get("speedup_warm"),
+                "p95_cold_ms": r.get("p95_cold_ms"),
+            }
+            for c, r in serving["concurrency"].items()
         }
     streaming = current.get("streaming")
     if streaming:
@@ -232,6 +291,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--brick-threshold", type=float, default=3.0,
                     help="absolute floor on warm brick-served speedup vs "
                          "the brick-free fresh scan")
+    ap.add_argument("--serve-threshold", type=float, default=2.0,
+                    help="absolute floor on cache-cold coalesced serving "
+                         "throughput vs serial engine.run at the highest "
+                         "measured concurrency")
     ap.add_argument("--history", default=None,
                     help="base-branch BENCH_trajectory.jsonl to extend")
     ap.add_argument("--trajectory", default="BENCH_trajectory.jsonl")
@@ -271,6 +334,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     print("perf-gate: brick-served warm vs cold:")
     print("\n".join(brick_lines))
     regressions += brick_regressions
+
+    serve_regressions, serve_lines = serve_gate(current, args.serve_threshold)
+    print("perf-gate: serving throughput under concurrency:")
+    print("\n".join(serve_lines))
+    regressions += serve_regressions
 
     # Extend the trajectory: base history (if any) + this run's row.
     if args.history and os.path.exists(args.history) \

@@ -21,8 +21,10 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke lane: only the coadd engine report "
-                         "(BENCH_coadd.json incl. batched rows and the "
-                         "sparse-vs-dense selectivity sweep), one repeat")
+                         "(BENCH_coadd.json incl. batched rows, the "
+                         "sparse-vs-dense selectivity sweep, and the "
+                         "serving queries/sec-under-concurrency rows), "
+                         "one repeat")
     ap.add_argument("--coadd-json", default="BENCH_coadd.json",
                     help="where to write the coadd engine dispatch/latency report")
     args = ap.parse_args()

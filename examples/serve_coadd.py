@@ -1,0 +1,10 @@
+"""Coadd-as-a-service demo: 16 concurrent clients through `CoaddService`.
+
+Runs the seeded serving drill (assertions on) — every response must be
+bitwise-equal to a direct `engine.run`, with coalescing and zero shed.
+
+PYTHONPATH=src python examples/serve_coadd.py
+"""
+from repro.launch.serve import main
+
+main(["--clients", "16", "--pool", "8", "--drill"])

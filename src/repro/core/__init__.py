@@ -2,7 +2,8 @@
 
 Public API:
   CoaddQuery, make_survey, SurveyConfig, CoaddEngine, METHODS,
-  SpatialIndex, JobTracker, WindowTracker, ChaosInjector.
+  SpatialIndex, JobTracker, WindowTracker, ChaosInjector,
+  CoaddService, Overloaded, ServiceStats.
 """
 
 from repro.core.bricks import BrickCover, BrickGrid
@@ -41,6 +42,7 @@ from repro.core.plan import (
 from repro.core.seqfile import BrickMeta, BrickStore, ResidencyManager
 from repro.core.prefilter import SpatialIndex
 from repro.core.query import BANDS, CoaddQuery
+from repro.core.serve import CoaddService, Overloaded, ServiceStats
 from repro.core.survey import Survey, SurveyConfig, make_survey
 
 __all__ = [
@@ -57,6 +59,7 @@ __all__ = [
     "CoaddPlan",
     "CoaddResult",
     "CoaddQuery",
+    "CoaddService",
     "DeterminismError",
     "FailureInjector",
     "FatalFault",
@@ -69,11 +72,13 @@ __all__ = [
     "MapTask",
     "MaterializeReport",
     "METHODS",
+    "Overloaded",
     "PoisonSpec",
     "PoisonedChunkError",
     "QueryKilled",
     "ResidencyManager",
     "ScanWindow",
+    "ServiceStats",
     "SparseScanIndex",
     "SpatialIndex",
     "Survey",

@@ -69,6 +69,13 @@ class BrickCover:
             for c in range(self.c0, self.c1)
         ]
 
+    @property
+    def tag(self) -> Tuple[str, int, int, int, int]:
+        """Hashable identity of this cover — the serving layer's popularity
+        accounting key (DESIGN.md §10): per-window hit/miss counts decide
+        what to materialize next and what the cost-aware LRU should pin."""
+        return (self.band, self.r0, self.r1, self.c0, self.c1)
+
 
 @dataclasses.dataclass(frozen=True)
 class BrickGrid:

@@ -92,6 +92,7 @@ from repro.core.plan import (
     compact_gates,
     compact_window_gate,
     compact_window_gates,
+    grid_digest,
     sparse_pack_index,
     stack_plans,
     union_sparse_index,
@@ -940,12 +941,7 @@ class CoaddEngine:
         query-grid scan of the same bounds: their window partials differ
         bitwise, so replaying one journal into the other would be wrong.
         """
-        if plan.grid_sky is None:
-            return ""
-        h = hashlib.sha256()
-        for g in plan.grid_sky:
-            h.update(np.ascontiguousarray(g, np.float32).tobytes())
-        return h.hexdigest()[:16]
+        return grid_digest(plan.grid_sky)
 
     def _block_rows(self, query: CoaddQuery, ds: PackedDataset) -> int:
         if self.block_rows is not None:
@@ -1495,6 +1491,44 @@ class CoaddEngine:
         plan = self.plan(self.brick_grid.brick_query(row, col, band), method)
         plan.grid_sky = self.brick_grid.brick_sky(row, col)
         return plan
+
+    def result_key(self, plan: CoaddPlan) -> str:
+        """Serving-cache identity of one plan's result (DESIGN.md §10).
+
+        The plan's value fingerprint (layout, grid, gate bytes, qvec bytes
+        — `CoaddPlan.fingerprint`) joined with the engine state that also
+        determines the pixels: the live PSF state (a retuned engine must
+        miss, the same contract as every derived-residency cache) and the
+        execution knobs that pick the program family (kernel vs XLA, sparse
+        gather, streaming partition — float summation order differs across
+        them, so bits may too).  Contract: equal keys ⇒ bitwise-equal
+        coadds, so a serving layer may answer the second request from the
+        first's cached output.
+        """
+        return (
+            f"{plan.fingerprint}|{self._psf_state()}"
+            f"|k{int(self.use_kernel)}|s{int(self.sparse)}"
+            f"|b{self.device_budget_bytes}"
+        )
+
+    def warm_brick_cover(self, query: CoaddQuery) -> Optional[BrickCover]:
+        """This query's brick cover iff *every* covered tile is stored.
+
+        The serving front end routes such queries straight to the
+        one-dispatch mosaic path (`run(use_bricks=True)`) — a guaranteed
+        warm serve, never an inline materialization surprise under load.
+        None when the query is unaligned or any tile is cold; the caller
+        counts that miss into the `bricks_missed` popularity signal that
+        decides what to materialize next (DESIGN.md §9/§10).
+        """
+        cover = self.brick_grid.decompose(query)
+        if cover is None:
+            return None
+        store = self.brick_store
+        if all(store.contains(self._brick_key(query.band, r, c))
+               for r, c in cover.bricks):
+            return cover
+        return None
 
     def run_window(self, query: CoaddQuery, method: str) -> CoaddResult:
         """The brick-free baseline for a brick-aligned query: one fresh

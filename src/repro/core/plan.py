@@ -28,6 +28,7 @@ executor gathers just those packs out of the resident layout with
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -65,6 +66,68 @@ class CoaddPlan:
     def packs_touched(self) -> int:
         """Distinct containers the gate opens (§4.1.4 locality statistic)."""
         return int(self.gate.any(axis=1).sum())
+
+    @property
+    def cost_budget(self) -> int:
+        """The §5 budget bucket this plan will scan at — the admission-control
+        cost signal (DESIGN.md §10).  A quarter-degree prefiltered query
+        buckets to a handful of packs; a full-survey raw query buckets to P.
+        The service's two-class scheduler splits cheap from expensive on
+        exactly this number, because it is what bounds the compiled scan
+        extent (and hence the dispatch time) the queue pays to run the plan.
+        """
+        return scan_budget(self.packs_touched, self.gate.shape[0])
+
+    @property
+    def coalesce_key(self) -> Tuple[str, int, str, Optional[float]]:
+        """Compatibility class for batching (DESIGN.md §10).
+
+        Plans coalesce into one vmapped `run_batch` dispatch iff they share
+        a resident layout, an output grid size (one static scan program), a
+        grid override (brick-lattice plans must not stack with query-grid
+        plans), and a PSF target (executors reject cross-target plans).
+        This is exactly the precondition `stack_plans` validates, lifted to
+        a hashable key the dispatcher can group a queue by.
+        """
+        return (self.layout, self.npix, grid_digest(self.grid_sky),
+                self.psf_target)
+
+    @property
+    def fingerprint(self) -> str:
+        """Value identity of this plan's *pixels*, independent of locate path.
+
+        A digest over everything that determines the coadd bytes — layout,
+        output grid (size + override), PSF target, gate bytes, query vector
+        — but *not* the method name: methods differ in job-init cost, never
+        in accepted images.  The serving result cache keys on this (plus the
+        engine's live PSF state), so a repeat query is served from resident
+        outputs without re-scanning (Kolosov's ingest-once/serve-forever).
+        """
+        h = hashlib.sha256()
+        h.update(
+            f"{self.layout}|{self.npix}|{self.psf_target}"
+            f"|{grid_digest(self.grid_sky)}".encode()
+        )
+        h.update(np.ascontiguousarray(self.gate).tobytes())
+        h.update(np.ascontiguousarray(self.qvec, np.float32).tobytes())
+        return h.hexdigest()
+
+
+def grid_digest(
+    grid_sky: Optional[Tuple[np.ndarray, np.ndarray]]
+) -> str:
+    """Digest of an output-grid override (empty string = default query grid).
+
+    Shared by the engine's journal identity (`_job_key` must distinguish a
+    lattice-window scan from the plain query-grid scan of the same bounds)
+    and the plan coalesce/fingerprint keys above.
+    """
+    if grid_sky is None:
+        return ""
+    h = hashlib.sha256()
+    for g in grid_sky:
+        h.update(np.ascontiguousarray(g, np.float32).tobytes())
+    return h.hexdigest()[:16]
 
 
 def scan_budget(n_gated: int, n_packs: int) -> int:
@@ -253,6 +316,7 @@ __all__: List[str] = [
     "compact_gates",
     "compact_window_gate",
     "compact_window_gates",
+    "grid_digest",
     "scan_budget",
     "sparse_pack_index",
     "stack_plans",

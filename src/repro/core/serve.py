@@ -1,0 +1,535 @@
+"""Coadd-as-a-service: the async multi-tenant query front end (DESIGN.md §10).
+
+The paper's premise is throughput under load — a 400-node scheduler packing
+nightly image streams onto busy machines — yet a bare `CoaddEngine` answers
+one caller at a time.  This module is the serving layer on top of it, the
+OpenCluster-style task queue adapted to the engine's actual economics:
+
+  queue → admit → coalesce → dispatch → cache
+
+* **Coalescing.**  Every request is planned at admission; plans that share a
+  `CoaddPlan.coalesce_key` (layout, npix, grid override, PSF target — the
+  `stack_plans` precondition) drain from the queue together and execute as
+  ONE vmapped `execute_batch` dispatch.  K concurrent users, one jitted
+  scan: exactly the Fig. 5 amortization the engine already optimizes for,
+  triggered by load instead of by a caller who happened to batch.  The
+  window for coalescing is natural, not a timer: while one dispatch holds
+  the (single) engine worker, new arrivals pile up in the queue and the
+  next drain takes them all — work-conserving, zero added latency at
+  concurrency 1.  Requests with *identical* `result_key`s merge further
+  (singleflight): one plan executes, every duplicate future resolves from
+  the same pixels.
+
+* **Admission / QoS.**  Load-shedding is typed and immediate: when the
+  service already holds `max_queue` open requests (or a tenant its
+  `tenant_inflight` cap), `submit` raises `Overloaded` instead of growing
+  an unbounded queue.  Admitted plans are classed cheap/expensive on
+  `CoaddPlan.cost_budget` — the §5 scan bucket that bounds dispatch time —
+  and the drain cycle runs weighted round-robin between the classes
+  (default 3:1 cheap), so a quarter-degree prefiltered query never queues
+  behind a convoy of full-survey monsters: it waits at most the one
+  dispatch already in flight plus its own.
+
+* **Result cache.**  Completed pixels are kept in an LRU keyed on
+  `CoaddEngine.result_key(plan)` — gate digest, qvec digest, layout/grid,
+  live PSF state — whose contract is "equal keys ⇒ bitwise-equal coadds",
+  so repeats are served from resident outputs without a scan (Kolosov's
+  ingest-once/serve-forever).  With ``use_bricks=True``, brick-aligned
+  queries route to the §9 mosaic path instead: warm covers are a
+  one-dispatch mosaic of cached tiles, and the per-cover hit/miss tallies
+  (`brick_popularity`) are the operator's signal for what to materialize
+  next.  Lattice semantics note: aligned queries then answer on the global
+  lattice window grid (bitwise-equal to `run_window`), like any
+  `run(use_bricks=True)` call — unaligned queries are untouched.
+
+* **Telemetry.**  `ServiceStats` mirrors the JobStats idiom: counters for
+  admitted/shed/coalesced/cached, queue depth, and p50/p95/p99 latency,
+  surfaced as a dataclass plus a JSON-ready `snapshot()`.
+
+Threading model: asyncio front end, ONE `ThreadPoolExecutor` worker thread
+for every engine touch (planning and dispatch both), so the engine — which
+is not thread-safe — stays effectively single-threaded while the event
+loop keeps admitting, shedding, and resolving futures.  All service state
+(queue, cache, stats) is mutated only on the loop thread.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.engine import CoaddEngine, CoaddResult
+from repro.core.plan import CoaddPlan
+from repro.core.query import CoaddQuery
+
+
+class Overloaded(RuntimeError):
+    """Typed admission rejection: the caller should back off and retry.
+
+    ``reason`` is ``"queue_full"`` (service-wide open-request limit) or
+    ``"tenant_cap"`` (per-tenant in-flight limit).  Raised *before* any
+    engine work is spent on the request — shedding is the cheap path.
+    """
+
+    def __init__(self, reason: str, detail: str = ""):
+        super().__init__(f"service overloaded ({reason}): {detail}")
+        self.reason = reason
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Serving telemetry, the JobStats of the front end.
+
+    Counter groups: admission (submitted/admitted/shed_*), dispatch
+    (dispatches + dispatched_queries → coalesce factor), result cache
+    (hits/misses/merged_inflight), brick routing (§9), fault domain
+    (retries observed in served results), and latency (p50/p95/p99 over
+    completed requests, cache hits included).
+    """
+
+    submitted: int = 0
+    admitted: int = 0
+    shed_queue_full: int = 0
+    shed_tenant_cap: int = 0
+    completed: int = 0
+    failed: int = 0
+    # One "dispatch" = one engine entry (execute / execute_batch / brick
+    # mosaic) the service issued; dispatched_queries = requests resolved by
+    # those entries, in-flight merges included, cache hits excluded.
+    dispatches: int = 0
+    dispatched_queries: int = 0
+    cheap_dispatches: int = 0
+    expensive_dispatches: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    merged_inflight: int = 0
+    brick_routed: int = 0
+    bricks_hit: int = 0
+    bricks_missed: int = 0
+    retries: int = 0
+    queue_depth: int = 0
+    queue_depth_peak: int = 0
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def shed(self) -> int:
+        return self.shed_queue_full + self.shed_tenant_cap
+
+    @property
+    def coalesce_factor(self) -> float:
+        """Requests answered per engine dispatch — the Fig. 5 amortization
+        the queue achieved (1.0 = no coalescing happened)."""
+        if self.dispatches == 0:
+            return 0.0 if self.dispatched_queries == 0 else float("inf")
+        return self.dispatched_queries / self.dispatches
+
+    def latency_ms(self, pct: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies_s), pct) * 1e3)
+
+    @property
+    def p50_ms(self) -> float:
+        return self.latency_ms(50.0)
+
+    @property
+    def p95_ms(self) -> float:
+        return self.latency_ms(95.0)
+
+    @property
+    def p99_ms(self) -> float:
+        return self.latency_ms(99.0)
+
+    def snapshot(self) -> Dict[str, float]:
+        """JSON-ready view (drops the raw latency list)."""
+        d = {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+            if f.name != "latencies_s"
+        }
+        d["coalesce_factor"] = round(self.coalesce_factor, 3)
+        d["p50_ms"] = round(self.p50_ms, 3)
+        d["p95_ms"] = round(self.p95_ms, 3)
+        d["p99_ms"] = round(self.p99_ms, 3)
+        return d
+
+
+@dataclasses.dataclass(eq=False)  # identity equality: queue removal must
+class _Pending:                   # never compare the numpy gate payloads
+    """One admitted request waiting in the submission queue."""
+
+    plan: CoaddPlan
+    key: str                  # engine.result_key(plan) — merge identity
+    cls: str                  # "cheap" | "expensive" (cost_budget class)
+    tenant: str
+    future: "asyncio.Future[CoaddResult]"
+
+
+class CoaddService:
+    """Async multi-tenant front end over one `CoaddEngine` (DESIGN.md §10).
+
+    Usage::
+
+        async with CoaddService(engine, max_queue=64) as svc:
+            results = await asyncio.gather(
+                *(svc.submit(q) for q in queries)
+            )
+
+    ``submit`` may also be called before `start`: requests queue up and the
+    first drain after `start` coalesces them — the deterministic pattern
+    the coalescing tests (and anyone replaying a recorded burst) use.
+
+    Parameters
+    ----------
+    method : default locate method for `submit(query)` without one.
+    max_queue : open-request limit; beyond it `submit` sheds `Overloaded`.
+    max_batch : largest coalesced group per dispatch (vmap width cap).
+    cheap_budget : `cost_budget` at or below which a plan classes cheap;
+        None → P/4 of the plan's own layout (a quarter of the scan extent).
+    cheap_weight : weighted-round-robin weight of the cheap class against
+        1 for expensive.
+    tenant_inflight : per-tenant open-request cap (None = uncapped).
+    cache_entries : result-cache LRU capacity (0 disables caching).
+    use_bricks : route brick-aligned queries to the §9 mosaic path and
+        keep per-cover popularity tallies.
+    """
+
+    def __init__(
+        self,
+        engine: CoaddEngine,
+        *,
+        method: str = "sql_structured",
+        max_queue: int = 64,
+        max_batch: int = 16,
+        cheap_budget: Optional[int] = None,
+        cheap_weight: int = 3,
+        tenant_inflight: Optional[int] = None,
+        cache_entries: int = 128,
+        use_bricks: bool = False,
+    ):
+        if max_queue <= 0:
+            raise ValueError(f"max_queue must be positive, got {max_queue}")
+        if max_batch <= 0:
+            raise ValueError(f"max_batch must be positive, got {max_batch}")
+        self.engine = engine
+        self.method = method
+        self.max_queue = max_queue
+        self.max_batch = max_batch
+        self.cheap_budget = cheap_budget
+        self.cheap_weight = max(int(cheap_weight), 1)
+        self.tenant_inflight = tenant_inflight
+        self.cache_entries = cache_entries
+        self.use_bricks = use_bricks
+
+        self.stats = ServiceStats()
+        # (band, r0, r1, c0, c1) cover tag -> [warm serves, cold misses]:
+        # the §9 popularity signal for what to materialize / pin next.
+        self.brick_popularity: Dict[Tuple, List[int]] = {}
+
+        self._queue: Deque[_Pending] = collections.deque()
+        self._cache: "collections.OrderedDict[str, CoaddResult]" = (
+            collections.OrderedDict()
+        )
+        self._open_total = 0
+        self._open_tenant: Dict[str, int] = collections.defaultdict(int)
+        self._credits = {"cheap": 0.0, "expensive": 0.0}
+        self._worker: Optional[ThreadPoolExecutor] = None
+        self._wake: Optional[asyncio.Event] = None
+        self._task: Optional[asyncio.Task] = None
+        self._running = False
+
+    # ----- lifecycle -----
+    async def start(self) -> None:
+        if self._running:
+            return
+        self._running = True
+        self._wake = asyncio.Event()
+        if self._queue:
+            self._wake.set()
+        self._task = asyncio.get_running_loop().create_task(
+            self._dispatch_loop()
+        )
+
+    async def stop(self) -> None:
+        """Drain the queue, then stop the dispatcher (idempotent)."""
+        if not self._running:
+            return
+        self._running = False
+        self._wake.set()
+        await self._task
+        self._task = None
+        if self._worker is not None:
+            self._worker.shutdown(wait=True)
+            self._worker = None
+
+    async def __aenter__(self) -> "CoaddService":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    # ----- submission -----
+    async def submit(
+        self,
+        query: CoaddQuery,
+        method: Optional[str] = None,
+        tenant: str = "default",
+    ) -> CoaddResult:
+        """Admit, plan, and eventually answer one query.
+
+        Raises `Overloaded` (shed, before any engine work) or re-raises
+        whatever fatal error the engine hit executing the plan.
+        """
+        m = method or self.method
+        self.stats.submitted += 1
+        if self._open_total >= self.max_queue:
+            self.stats.shed_queue_full += 1
+            raise Overloaded(
+                "queue_full", f"{self._open_total} open >= {self.max_queue}"
+            )
+        cap = self.tenant_inflight
+        if cap is not None and self._open_tenant[tenant] >= cap:
+            self.stats.shed_tenant_cap += 1
+            raise Overloaded(
+                "tenant_cap", f"tenant {tenant!r} at {cap} in flight"
+            )
+        self.stats.admitted += 1
+        self._open_total += 1
+        self._open_tenant[tenant] += 1
+        t0 = time.perf_counter()
+        try:
+            result = await self._serve(query, m)
+        except Overloaded:
+            raise
+        except Exception:
+            self.stats.failed += 1
+            raise
+        else:
+            self.stats.completed += 1
+            self.stats.latencies_s.append(time.perf_counter() - t0)
+            return result
+        finally:
+            self._open_total -= 1
+            self._open_tenant[tenant] -= 1
+
+    async def _serve(self, query: CoaddQuery, method: str) -> CoaddResult:
+        loop = asyncio.get_running_loop()
+        if self.use_bricks:
+            routed = await self._maybe_route_bricks(query, method)
+            if routed is not None:
+                return routed
+        plan = await loop.run_in_executor(
+            self._ensure_worker(), self.engine.plan, query, method
+        )
+        key = self.engine.result_key(plan)
+        cached = self._cache_get(key)
+        if cached is not None:
+            self.stats.cache_hits += 1
+            return cached
+        self.stats.cache_misses += 1
+        pend = _Pending(
+            plan=plan,
+            key=key,
+            cls=self._classify(plan),
+            tenant="",  # accounting lives in submit(); unused past here
+            future=loop.create_future(),
+        )
+        self._queue.append(pend)
+        self.stats.queue_depth = len(self._queue)
+        self.stats.queue_depth_peak = max(
+            self.stats.queue_depth_peak, self.stats.queue_depth
+        )
+        if self._wake is not None:
+            self._wake.set()
+        return await pend.future
+
+    async def _maybe_route_bricks(
+        self, query: CoaddQuery, method: str
+    ) -> Optional[CoaddResult]:
+        """Serve a brick-aligned query by the §9 mosaic path, or None.
+
+        Aligned queries always take this path when ``use_bricks`` is on
+        (cold covers materialize inline, exactly like `run(use_bricks=True)`)
+        so their answers stay on the lattice grid regardless of store
+        warmth; the warm/cold split only feeds the popularity tallies.
+        """
+        loop = asyncio.get_running_loop()
+        cover = self.engine.brick_grid.decompose(query)
+        if cover is None:
+            return None
+        # Store warmth is engine state — read it on the engine worker so it
+        # never races a dispatch mutating the residency LRU.
+        warm = (
+            await loop.run_in_executor(
+                self._ensure_worker(), self.engine.warm_brick_cover, query
+            )
+            is not None
+        )
+        tally = self.brick_popularity.setdefault(cover.tag, [0, 0])
+        tally[0 if warm else 1] += 1
+        # Mosaic pixels depend on the cover and the live PSF state, not on
+        # the locate method (bricks are shared across methods).
+        key = f"brick|{cover.tag}|{self.engine._psf_state()}"
+        cached = self._cache_get(key)
+        if cached is not None:
+            self.stats.cache_hits += 1
+            return cached
+        self.stats.cache_misses += 1
+        result = await loop.run_in_executor(
+            self._ensure_worker(),
+            lambda: self.engine.run(query, method, use_bricks=True),
+        )
+        self.stats.brick_routed += 1
+        self.stats.bricks_hit += result.stats.bricks_hit
+        self.stats.bricks_missed += result.stats.bricks_missed
+        self.stats.retries += result.stats.retries
+        self.stats.dispatches += 1
+        self.stats.dispatched_queries += 1
+        self._cache_put(key, result)
+        return result
+
+    # ----- dispatcher -----
+    async def _dispatch_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            if not self._queue:
+                if not self._running:
+                    return
+                self._wake.clear()
+                if self._queue:  # raced with an enqueue
+                    continue
+                await self._wake.wait()
+                continue
+            group = self._select_group()
+            self.stats.queue_depth = len(self._queue)
+            if not group:
+                continue
+            try:
+                uniq_keys, results = await loop.run_in_executor(
+                    self._ensure_worker(), self._execute_group, group
+                )
+            except Exception as exc:
+                for p in group:
+                    if not p.future.done():
+                        p.future.set_exception(exc)
+                continue
+            by_key = dict(zip(uniq_keys, results))
+            self.stats.dispatches += 1
+            self.stats.dispatched_queries += len(group)
+            if group[0].cls == "cheap":
+                self.stats.cheap_dispatches += 1
+            else:
+                self.stats.expensive_dispatches += 1
+            self.stats.merged_inflight += len(group) - len(uniq_keys)
+            for key, res in by_key.items():
+                self.stats.retries += res.stats.retries
+                self._cache_put(key, res)
+            for p in group:
+                if not p.future.done():
+                    p.future.set_result(by_key[p.key])
+
+    def _select_group(self) -> List[_Pending]:
+        """Drain one coalescible group from the queue (loop thread).
+
+        First resolves any pending whose key materialized in the cache
+        since enqueue (an identical request completed meanwhile), then
+        picks a class by weighted round-robin and takes every queued plan
+        sharing the oldest pending's coalesce key, up to ``max_batch``.
+        """
+        for p in list(self._queue):
+            hit = self._cache_get(p.key)
+            if hit is not None:
+                self._queue.remove(p)
+                self.stats.cache_hits += 1
+                # un-count the miss recorded at admission: it was served
+                # from cache after all, never dispatched.
+                self.stats.cache_misses -= 1
+                if not p.future.done():
+                    p.future.set_result(hit)
+        if not self._queue:
+            return []
+        cheap = [p for p in self._queue if p.cls == "cheap"]
+        expensive = [p for p in self._queue if p.cls == "expensive"]
+        if cheap and expensive:
+            total = self.cheap_weight + 1.0
+            self._credits["cheap"] += self.cheap_weight
+            self._credits["expensive"] += 1.0
+            pick = (
+                "cheap"
+                if self._credits["cheap"] >= self._credits["expensive"]
+                else "expensive"
+            )
+            self._credits[pick] -= total
+        else:
+            pick = "cheap" if cheap else "expensive"
+        pool = cheap if pick == "cheap" else expensive
+        lead = pool[0]
+        group = [
+            p for p in pool if p.plan.coalesce_key == lead.plan.coalesce_key
+        ][: self.max_batch]
+        for p in group:
+            self._queue.remove(p)
+        return group
+
+    def _execute_group(
+        self, group: List[_Pending]
+    ) -> Tuple[List[str], List[CoaddResult]]:
+        """Worker thread: merge identical plans, run ONE engine dispatch.
+
+        A group of one runs the single-program `execute` path (bitwise
+        trivially equal to `engine.run`); larger groups run the vmapped
+        `execute_batch` over the de-duplicated plans.
+        """
+        uniq: "collections.OrderedDict[str, CoaddPlan]" = (
+            collections.OrderedDict()
+        )
+        for p in group:
+            uniq.setdefault(p.key, p.plan)
+        plans = list(uniq.values())
+        if len(plans) == 1:
+            results = [self.engine.execute(plans[0])]
+        else:
+            results = self.engine.execute_batch(plans)
+        return list(uniq.keys()), results
+
+    # ----- helpers -----
+    def _ensure_worker(self) -> ThreadPoolExecutor:
+        if self._worker is None:
+            self._worker = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="coadd-serve"
+            )
+        return self._worker
+
+    def _classify(self, plan: CoaddPlan) -> str:
+        cheap_at = self.cheap_budget
+        if cheap_at is None:
+            cheap_at = max(1, plan.gate.shape[0] // 4)
+        return "cheap" if plan.cost_budget <= cheap_at else "expensive"
+
+    def _cache_get(self, key: str) -> Optional[CoaddResult]:
+        res = self._cache.get(key)
+        if res is not None:
+            self._cache.move_to_end(key)
+        return res
+
+    def _cache_put(self, key: str, result: CoaddResult) -> None:
+        if self.cache_entries <= 0:
+            return
+        self._cache[key] = result
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_entries:
+            self._cache.popitem(last=False)
+
+
+__all__ = ["CoaddService", "Overloaded", "ServiceStats"]

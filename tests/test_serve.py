@@ -1,0 +1,323 @@
+"""Serving-layer drills for `core/serve.py` (DESIGN.md §10).
+
+Each drill pins one clause of the serving contract: coalescing (K
+concurrent compatible queries = ONE engine dispatch, counter-tested the
+same way the run_batch tests pin re-uploads), admission QoS (cheap queries
+never queue behind a convoy of monsters; typed `Overloaded` shedding at
+the queue and tenant caps), the result cache (bitwise parity + hit
+counters), brick routing (§9 mosaic path, popularity tallies), and the
+fault domain under load (an injected transient heals inside the engine;
+clients only ever see clean bitwise pixels).
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChaosInjector,
+    CoaddEngine,
+    CoaddQuery,
+    CoaddService,
+    FaultSchedule,
+    Overloaded,
+    SurveyConfig,
+    make_survey,
+)
+
+
+@pytest.fixture(scope="module")
+def survey():
+    return make_survey(SurveyConfig(
+        n_runs=3, n_camcols=4, n_bands=3, n_fields=6,
+        height=24, width=24, n_sources=120, seed=11,
+    ))
+
+
+@pytest.fixture(scope="module")
+def engine(survey):
+    return CoaddEngine(survey, pack_capacity=16)
+
+
+def cheap_q(i, npix=48):
+    lo = 37.1 + 0.12 * i
+    return CoaddQuery(band="r", ra_bounds=(lo, lo + 0.4),
+                      dec_bounds=(-0.3, 0.3), npix=npix)
+
+
+def monster_q(npix):
+    return CoaddQuery(band="r", ra_bounds=(37.0, 38.5),
+                      dec_bounds=(-0.8, 0.8), npix=npix)
+
+
+async def _queue_then_start(svc, queries, **submit_kw):
+    """The deterministic burst pattern: enqueue everything, then start."""
+    tasks = [asyncio.ensure_future(svc.submit(q, **submit_kw))
+             for q in queries]
+    while svc.queue_depth < len(queries):
+        await asyncio.sleep(0.005)
+    async with svc:
+        return await asyncio.gather(*tasks)
+
+
+# ----- coalescing correctness ----------------------------------------------
+
+def test_concurrent_compatible_queries_one_dispatch(engine):
+    """K same-(layout, npix) queries queued together = ONE engine dispatch,
+    every response bitwise-equal to its own serial engine.run."""
+    queries = [cheap_q(i) for i in range(6)]
+    serial = [engine.run(q, "sql_structured") for q in queries]
+    svc = CoaddService(engine, max_batch=16)
+    d0 = engine.dispatch_count
+
+    results = asyncio.run(_queue_then_start(svc, queries))
+
+    assert engine.dispatch_count - d0 == 1
+    assert svc.stats.dispatches == 1
+    assert svc.stats.dispatched_queries == 6
+    assert svc.stats.coalesce_factor == 6.0
+    for r, s in zip(results, serial):
+        np.testing.assert_array_equal(r.coadd, s.coadd)
+        np.testing.assert_array_equal(r.depth, s.depth)
+
+
+def test_identical_inflight_queries_merge(engine):
+    """Duplicates of one query merge singleflight-style: one executed plan
+    answers every copy, counted in merged_inflight."""
+    q = cheap_q(0)
+    serial = engine.run(q, "sql_structured")
+    svc = CoaddService(engine)
+
+    results = asyncio.run(_queue_then_start(svc, [q, q, q, q]))
+
+    assert svc.stats.dispatches == 1
+    assert svc.stats.merged_inflight == 3
+    for r in results:
+        np.testing.assert_array_equal(r.coadd, serial.coadd)
+        np.testing.assert_array_equal(r.depth, serial.depth)
+
+
+def test_incompatible_npix_split_into_groups(engine):
+    """Different npix cannot stack (static scan shape): two groups, two
+    dispatches, still bitwise-correct."""
+    qs = [cheap_q(0, npix=48), cheap_q(1, npix=48), cheap_q(2, npix=32)]
+    serial = [engine.run(q, "sql_structured") for q in qs]
+    svc = CoaddService(engine)
+
+    results = asyncio.run(_queue_then_start(svc, qs))
+
+    assert svc.stats.dispatches == 2
+    for r, s in zip(results, serial):
+        np.testing.assert_array_equal(r.coadd, s.coadd)
+
+
+# ----- admission / QoS ------------------------------------------------------
+
+def test_cheap_query_not_queued_behind_monsters(engine):
+    """Weighted-fair classes: with a convoy of expensive full-survey
+    queries queued ahead of one cheap query, the cheap dispatch goes
+    first — its latency is bounded by its own dispatch, not the convoy."""
+    order = []
+
+    async def scenario():
+        svc = CoaddService(engine, cheap_budget=4)
+        convoy = [monster_q(96), monster_q(112), monster_q(80)]
+
+        async def client(tag, q):
+            await svc.submit(q)
+            order.append(tag)
+
+        tasks = [asyncio.ensure_future(client(f"monster{i}", q))
+                 for i, q in enumerate(convoy)]
+        tasks.append(asyncio.ensure_future(client("cheap", cheap_q(0))))
+        while svc.queue_depth < 4:
+            await asyncio.sleep(0.005)
+        async with svc:
+            await asyncio.gather(*tasks)
+        return svc
+
+    svc = asyncio.run(scenario())
+    assert order[0] == "cheap"
+    assert svc.stats.cheap_dispatches == 1
+    assert svc.stats.expensive_dispatches == 3  # distinct npix: no stacking
+
+
+def test_overload_sheds_typed_queue_full(engine):
+    """Admission beyond max_queue open requests sheds `Overloaded`
+    immediately — before any engine work — and counts it."""
+
+    async def scenario():
+        svc = CoaddService(engine, max_queue=2)
+        tasks = [asyncio.ensure_future(svc.submit(cheap_q(i)))
+                 for i in range(5)]
+        await asyncio.sleep(0)  # let every submit hit admission
+        async with svc:
+            return svc, await asyncio.gather(*tasks, return_exceptions=True)
+
+    svc, results = asyncio.run(scenario())
+    shed = [r for r in results if isinstance(r, Overloaded)]
+    served = [r for r in results if not isinstance(r, Exception)]
+    assert len(shed) == 3 and len(served) == 2
+    assert all(e.reason == "queue_full" for e in shed)
+    assert svc.stats.shed_queue_full == 3
+    assert svc.stats.completed == 2
+
+
+def test_tenant_inflight_cap(engine):
+    """One tenant cannot occupy the queue past its cap; other tenants are
+    unaffected."""
+
+    async def scenario():
+        svc = CoaddService(engine, tenant_inflight=1)
+        t = [asyncio.ensure_future(svc.submit(cheap_q(0), tenant="hog")),
+             asyncio.ensure_future(svc.submit(cheap_q(1), tenant="hog")),
+             asyncio.ensure_future(svc.submit(cheap_q(2), tenant="polite"))]
+        await asyncio.sleep(0)
+        async with svc:
+            return svc, await asyncio.gather(*t, return_exceptions=True)
+
+    svc, results = asyncio.run(scenario())
+    assert isinstance(results[1], Overloaded)
+    assert results[1].reason == "tenant_cap"
+    assert not isinstance(results[0], Exception)
+    assert not isinstance(results[2], Exception)
+    assert svc.stats.shed_tenant_cap == 1
+
+
+# ----- result cache ---------------------------------------------------------
+
+def test_result_cache_bitwise_parity_and_counters(engine):
+    """A repeat query is served from the result cache — same pixels
+    bitwise, no new dispatch, hit counter incremented."""
+    q = cheap_q(3)
+
+    async def scenario():
+        async with CoaddService(engine) as svc:
+            first = await svc.submit(q)
+            d = svc.stats.dispatches
+            again = await svc.submit(q)
+            return svc, d, first, again
+
+    svc, d_after_first, first, again = asyncio.run(scenario())
+    assert svc.stats.cache_hits == 1
+    assert svc.stats.dispatches == d_after_first  # no second dispatch
+    np.testing.assert_array_equal(first.coadd, again.coadd)
+    np.testing.assert_array_equal(first.depth, again.depth)
+    serial = engine.run(q, "sql_structured")
+    np.testing.assert_array_equal(again.coadd, serial.coadd)
+
+
+def test_result_key_tracks_psf_state(survey):
+    """The cache key carries the live PSF state: retuning the engine
+    changes the key, so stale matched pixels can never serve."""
+    eng = CoaddEngine(survey, pack_capacity=16)
+    plan = eng.plan(cheap_q(0), "sql_structured")
+    k0 = eng.result_key(plan)
+    eng.match_psf_sigma = 2.0
+    plan2 = eng.plan(cheap_q(0), "sql_structured")
+    assert eng.result_key(plan2) != k0
+
+
+def test_queued_duplicate_served_from_cache_after_first_completes(engine):
+    """A request whose identical twin completed while it sat in the queue
+    resolves from the cache at drain time, not by re-dispatching."""
+    q_hot = cheap_q(5)
+
+    async def scenario():
+        async with CoaddService(engine) as svc:
+            await svc.submit(q_hot)  # populate cache
+            r = await svc.submit(q_hot)
+            return svc, r
+
+    svc, r = asyncio.run(scenario())
+    assert svc.stats.cache_hits == 1
+    serial = engine.run(q_hot, "sql_structured")
+    np.testing.assert_array_equal(r.coadd, serial.coadd)
+
+
+# ----- brick routing (§9) ---------------------------------------------------
+
+def test_brick_aligned_queries_route_to_mosaic(survey):
+    """With use_bricks on, an aligned query answers on the lattice grid
+    (bitwise `run_window` parity), tallies popularity, and a second
+    service sees the now-warm cover."""
+    eng = CoaddEngine(survey, pack_capacity=16, brick_npix=32)
+    q = eng.brick_grid.window_query(1, 2, 1, 2, "r")
+    ref = eng.run_window(q, "sql_structured")
+
+    async def one(svc_kwargs=None):
+        async with CoaddService(eng, use_bricks=True) as svc:
+            r = await svc.submit(q)
+        return svc, r
+
+    svc1, r1 = asyncio.run(one())
+    assert svc1.stats.brick_routed == 1
+    np.testing.assert_array_equal(r1.coadd, ref.coadd)
+    np.testing.assert_array_equal(r1.depth, ref.depth)
+    # cold first touch: a miss tally, inline materialization warmed it
+    assert svc1.brick_popularity[("r", 1, 2, 1, 2)] == [0, 1]
+
+    svc2, r2 = asyncio.run(one())
+    # now warm: served as a pure mosaic of stored tiles, hit tally
+    assert svc2.brick_popularity[("r", 1, 2, 1, 2)] == [1, 0]
+    assert svc2.stats.bricks_hit >= 1
+    np.testing.assert_array_equal(r2.coadd, ref.coadd)
+
+    # unaligned queries are untouched by routing
+    async def unaligned():
+        async with CoaddService(eng, use_bricks=True) as svc:
+            await svc.submit(cheap_q(0))
+            return svc
+
+    svc3 = asyncio.run(unaligned())
+    assert svc3.stats.brick_routed == 0
+
+
+# ----- chaos under load (§8) ------------------------------------------------
+
+def test_transient_fault_under_load_clients_unaffected(survey):
+    """An injected transient upload failure during a concurrent burst is
+    retried inside the engine; every client still gets clean bitwise
+    pixels and the service surfaces the retry count."""
+    probe = CoaddEngine(survey, pack_capacity=8)
+    ds = probe.exec_dataset("structured")[0]
+    budget = max(ds.chunk_nbytes(0, ds.n_packs) // 4, 1)
+
+    def streaming(injector=None):
+        return CoaddEngine(survey, pack_capacity=8,
+                           device_budget_bytes=budget,
+                           stream_chunk_packs=2, fault_backoff_s=1e-4,
+                           fault_injector=injector)
+
+    queries = [cheap_q(i) for i in range(4)]
+    clean = [streaming().run(q, "sql_structured") for q in queries]
+
+    inj = ChaosInjector(FaultSchedule(upload_fail_ordinals=(0,)))
+    eng = streaming(injector=inj)
+    svc = CoaddService(eng)
+    results = asyncio.run(_queue_then_start(svc, queries))
+
+    assert inj.injected["upload_fail"] == 1
+    assert svc.stats.retries >= 1
+    assert svc.stats.failed == 0
+    assert svc.stats.completed == len(queries)
+    for r, c in zip(results, clean):
+        np.testing.assert_array_equal(r.coadd, c.coadd)
+        np.testing.assert_array_equal(r.depth, c.depth)
+
+
+# ----- telemetry ------------------------------------------------------------
+
+def test_service_stats_snapshot_shape(engine):
+    """snapshot() is JSON-ready and carries the derived telemetry."""
+    svc = CoaddService(engine)
+    results = asyncio.run(_queue_then_start(svc, [cheap_q(0), cheap_q(1)]))
+    assert len(results) == 2
+    snap = svc.stats.snapshot()
+    for field in ("submitted", "admitted", "dispatches", "coalesce_factor",
+                  "p50_ms", "p95_ms", "p99_ms", "queue_depth_peak"):
+        assert field in snap
+    assert snap["submitted"] == 2
+    assert snap["p95_ms"] >= 0.0
+    import json
+    json.dumps(snap)
