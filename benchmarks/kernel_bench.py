@@ -5,6 +5,7 @@ device-resident engine's dispatch-count accounting (`BENCH_coadd.json`)."""
 from __future__ import annotations
 
 import json
+import statistics
 import time
 from typing import Dict, List
 
@@ -169,6 +170,10 @@ def bench_coadd_engine(out_path: str = "BENCH_coadd.json",
     rows += brick_rows
     serving_rows, serving = _bench_serving(repeats=repeats)
     rows += serving_rows
+    robust_rows, robust = _bench_robust(eng, repeats=repeats)
+    rows += robust_rows
+    detect_rows, diff_detect = _bench_diff_detect(repeats=repeats)
+    rows += detect_rows
     payload = {
         "npix": QUERY_LARGE.npix,
         "n_images": eng.dataset("per_file").n_packs,
@@ -182,6 +187,8 @@ def bench_coadd_engine(out_path: str = "BENCH_coadd.json",
         "durable_overhead": durable_overhead,
         "bricks": bricks,
         "serving": serving,
+        "robust_stack": robust,
+        "diff_detect": diff_detect,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
@@ -745,6 +752,117 @@ def _bench_psf_matched(repeats: int = 1) -> tuple:
         f"repeat_uploads={repeat_uploads}"
     ]
     return rows, psf_matched
+
+
+def _bench_robust(eng, repeats: int = 3) -> tuple:
+    """Robust-estimator overhead vs the plain mean (DESIGN.md §11).
+
+    The clipped mean re-scans the gated samples once with fixed clip
+    operands (2 passes total), the two-round median adds a binapprox
+    histogram pass (3 total) — so the honest cost model is a small
+    multiple of the mean's scan time.  Trials are interleaved
+    (mean/clipped/median round-robin) and the reported time is the
+    min-of-trials — the same best-run statistic `_best_run` uses for the
+    method rows: scheduler noise only ever adds time, so the min is the
+    estimator's actual cost and the ratio of mins is stable under load
+    drift; the perf gate holds the per-pass ratios under
+    --robust-threshold.
+    """
+    from benchmarks.paper_tables import QUERY_LARGE
+
+    fns = {
+        "mean": lambda: eng.run(QUERY_LARGE, "sql_structured"),
+        "clipped": lambda: eng.run(QUERY_LARGE, "sql_structured",
+                                   reduce="clipped"),
+        "median": lambda: eng.run(QUERY_LARGE, "sql_structured",
+                                  reduce="median"),
+    }
+    times: Dict[str, List[float]] = {k: [] for k in fns}
+    for fn in fns.values():
+        fn()  # warm every jit cache before any clock starts
+    # Min over >= 5 interleaved trials: the gate rides on the ratio of
+    # these, so buy stability — the runs are ~0.1s each.
+    for _ in range(max(repeats, 5)):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            times[k].append(time.perf_counter() - t0)
+    med = {k: min(v) for k, v in times.items()}
+    r = eng.run(QUERY_LARGE, "sql_structured", reduce="clipped")
+    n_img = max(r.stats.files_considered, 1)
+    robust = {
+        "method": "sql_structured",
+        "us_per_query_mean": med["mean"] * 1e6,
+        "us_per_query_clipped": med["clipped"] * 1e6,
+        "us_per_query_median": med["median"] * 1e6,
+        "us_per_image_clipped": med["clipped"] * 1e6 / n_img,
+        "us_per_image_median": med["median"] * 1e6 / n_img,
+        "overhead_clipped_vs_mean": med["clipped"] / med["mean"],
+        "overhead_median_vs_mean": med["median"] / med["mean"],
+        "reduce_passes_clipped": r.stats.reduce_passes,
+        "clip_k": eng.clip_k,
+        "median_bins": eng.median_bins,
+    }
+    rows = [
+        f"coadd/robust_stack,{med['clipped']*1e6/n_img:.1f},"
+        f"mean={med['mean']*1e6:.0f}us;clipped={med['clipped']*1e6:.0f}us"
+        f"(x{robust['overhead_clipped_vs_mean']:.2f});"
+        f"median={med['median']*1e6:.0f}us"
+        f"(x{robust['overhead_median_vs_mean']:.2f})"
+    ]
+    return rows, robust
+
+
+def _bench_diff_detect(repeats: int = 3) -> tuple:
+    """Difference imaging + source detection as one timed workload (§11).
+
+    Builds its own survey (transient injection mutates pixels in place —
+    the shared benchmark survey must stay pristine), PSF-homogenizes both
+    sides, serves the template from materialized bricks, and times the
+    epoch-minus-template difference plus the on-device detection.  The
+    recovered/spurious counts ride along so a silently broken detector
+    can't keep posting good times.
+    """
+    from repro.core import (
+        CoaddEngine, CoaddQuery, SurveyConfig, detect_sources,
+        difference_image, inject_transients, make_survey, match_detections,
+    )
+
+    sv = make_survey(SurveyConfig(n_runs=3, n_fields=5, n_sources=100,
+                                  height=20, width=20))
+    query = CoaddQuery(band="r", ra_bounds=(37.3, 37.9),
+                       dec_bounds=(-0.5, 0.3), npix=48)
+    truths = inject_transients(sv, query, n=8, flux=400.0, seed=7)
+    eng = CoaddEngine(sv, pack_capacity=16, match_psf_sigma=2.0)
+
+    def drill():
+        diff, da, db = difference_image(eng, query, reduce="clipped")
+        return detect_sources(diff, da, db, nsigma=5.0), diff, da, db
+
+    cat, diff, da, db = drill()  # warm jits + materialize template bricks
+    ts = []
+    for _ in range(max(repeats, 3)):
+        t0 = time.perf_counter()
+        cat, diff, da, db = drill()
+        ts.append(time.perf_counter() - t0)
+    dt = statistics.median(ts)
+    recovered, spurious = match_detections(cat, query, truths)
+    n_img = sum(1 for im in sv.images if im.band == query.band)
+    diff_detect = {
+        "us_per_query": dt * 1e6,
+        "us_per_image": dt * 1e6 / max(n_img, 1),
+        "n_injected": int(len(truths)),
+        "recovered": recovered,
+        "spurious": spurious,
+        "detections": len(cat),
+        "nsigma": 5.0,
+    }
+    rows = [
+        f"coadd/diff_detect,{dt*1e6/max(n_img,1):.1f},"
+        f"us_per_query={dt*1e6:.0f};recovered={recovered}/{len(truths)};"
+        f"spurious={spurious}"
+    ]
+    return rows, diff_detect
 
 
 def _bench_batched(eng, repeats: int = 3,

@@ -27,7 +27,14 @@ bitwise-identical results.  The serving rows (``serving``) are gated
 absolutely at ``--serve-threshold`` (default 2.0x): at the highest
 measured concurrency a cache-cold `CoaddService` must answer the client
 burst at that multiple of the serial engine.run queries/sec, with zero
-shed and the cache-warm replay never slower than cold.
+shed and the cache-warm replay never slower than cold.  The robust rows
+(``robust_stack``/``diff_detect``) are gated absolutely at
+``--robust-threshold`` (default 2.0x): each added pass may at most multiply
+the previous schedule's cost by the threshold — the sigma-clipped mean (one
+extra fixed-operand re-scan) vs the plain mean, the binapprox median (one
+further histogram round) vs the clipped mean — and the difference-imaging
+drill must keep recovering >= 95% of its injected transients with zero
+spurious detections.
 
   python -m benchmarks.perf_gate --current BENCH_coadd.json \
       [--baseline path.json] [--history old_trajectory.jsonl] \
@@ -230,6 +237,69 @@ def serve_gate(current: Dict, threshold: float) -> Tuple[List[str], List[str]]:
     return regressions, lines
 
 
+def robust_gate(current: Dict, threshold: float) -> Tuple[List[str], List[str]]:
+    """Absolute gate on robust-estimator overhead (DESIGN.md §11).
+
+    The mean, clipped, and median stacks ran interleaved in the same
+    --quick invocation, so no baseline artifact is needed.  The rule is
+    uniform per added pass: each extra pass may at most multiply the
+    previous schedule's cost by ``threshold`` — the clipped mean (one
+    extra fixed-operand re-scan over the resident warp) must stay within
+    ``threshold`` x the plain mean, and the median (one further binapprox
+    histogram round) within ``threshold`` x the clipped mean.  The
+    diff_detect row rides along as a correctness tripwire: a detector
+    that stops recovering its injections fails here, not just in the
+    slow test lane.
+    """
+    rec = current.get("robust_stack")
+    regressions: List[str] = []
+    lines: List[str] = []
+    if not rec:
+        lines.append("  robust_stack: no rows (old artifact?)")
+    else:
+        r_clip = float(rec["overhead_clipped_vs_mean"])
+        r_med = float(rec["overhead_median_vs_mean"])
+        r_med_vs_clip = r_med / max(r_clip, 1e-9)
+        lines.append(
+            f"  robust_stack: clipped {rec['us_per_query_clipped']:.0f} vs "
+            f"mean {rec['us_per_query_mean']:.0f} us/query "
+            f"({r_clip:.2f}x, gate <= {threshold:.2f}x); "
+            f"median {rec['us_per_query_median']:.0f} us/query "
+            f"({r_med_vs_clip:.2f}x clipped, gate <= {threshold:.2f}x)"
+        )
+        if r_clip > threshold:
+            regressions.append(
+                f"robust_stack: clipped mean costs {r_clip:.2f}x the plain "
+                f"mean (> {threshold:.2f}x per-pass budget)"
+            )
+        if r_med_vs_clip > threshold:
+            regressions.append(
+                f"robust_stack: median costs {r_med_vs_clip:.2f}x the "
+                f"clipped mean (> {threshold:.2f}x per-pass budget)"
+            )
+    det = current.get("diff_detect")
+    if not det:
+        lines.append("  diff_detect: no rows (old artifact?)")
+    else:
+        lines.append(
+            f"  diff_detect: {det['us_per_query']:.0f} us/query, recovered "
+            f"{det['recovered']}/{det['n_injected']}, "
+            f"spurious {det['spurious']}"
+        )
+        n = max(int(det["n_injected"]), 1)
+        if det["recovered"] < 0.95 * n:
+            regressions.append(
+                f"diff_detect: recovered only {det['recovered']}/{n} "
+                f"injected transients (< 95%)"
+            )
+        if det.get("spurious", 0):
+            regressions.append(
+                f"diff_detect: {det['spurious']} spurious detection(s) "
+                f"(static-sky drill demands zero)"
+            )
+    return regressions, lines
+
+
 def trajectory_row(current: Dict, sha: str, ref: str) -> Dict:
     """One compact history row: us/image per row + the streaming headline."""
     row = {
@@ -263,6 +333,20 @@ def trajectory_row(current: Dict, sha: str, ref: str) -> Dict:
             }
             for c, r in serving["concurrency"].items()
         }
+    robust = current.get("robust_stack")
+    if robust:
+        row["robust_overhead"] = {
+            "clipped_vs_mean": robust.get("overhead_clipped_vs_mean"),
+            "median_vs_mean": robust.get("overhead_median_vs_mean"),
+        }
+    det = current.get("diff_detect")
+    if det:
+        row["diff_detect"] = {
+            "us_per_query": det.get("us_per_query"),
+            "recovered": det.get("recovered"),
+            "n_injected": det.get("n_injected"),
+            "spurious": det.get("spurious"),
+        }
     streaming = current.get("streaming")
     if streaming:
         row["streaming"] = {
@@ -295,6 +379,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="absolute floor on cache-cold coalesced serving "
                          "throughput vs serial engine.run at the highest "
                          "measured concurrency")
+    ap.add_argument("--robust-threshold", type=float, default=2.0,
+                    help="per-pass cost ceiling: clipped vs mean, and "
+                         "median vs clipped, must each stay under this "
+                         "ratio")
     ap.add_argument("--history", default=None,
                     help="base-branch BENCH_trajectory.jsonl to extend")
     ap.add_argument("--trajectory", default="BENCH_trajectory.jsonl")
@@ -339,6 +427,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     print("perf-gate: serving throughput under concurrency:")
     print("\n".join(serve_lines))
     regressions += serve_regressions
+
+    robust_regressions, robust_lines = robust_gate(
+        current, args.robust_threshold)
+    print("perf-gate: robust-estimator overhead + difference detection:")
+    print("\n".join(robust_lines))
+    regressions += robust_regressions
 
     # Extend the trajectory: base history (if any) + this run's row.
     if args.history and os.path.exists(args.history) \

@@ -7,6 +7,14 @@ Public API:
 """
 
 from repro.core.bricks import BrickCover, BrickGrid
+from repro.core.detect import (
+    DetectionCatalog,
+    detect_sources,
+    difference_image,
+    epoch_time_bounds,
+    inject_transients,
+    match_detections,
+)
 from repro.core.durable import BrickSpill, DiskJournal, JournalStore
 from repro.core.engine import METHODS, CoaddEngine, CoaddResult, JobStats
 from repro.core.faults import (
@@ -60,6 +68,7 @@ __all__ = [
     "CoaddResult",
     "CoaddQuery",
     "CoaddService",
+    "DetectionCatalog",
     "DeterminismError",
     "FailureInjector",
     "FatalFault",
@@ -86,7 +95,12 @@ __all__ = [
     "TransientFault",
     "WindowTracker",
     "classify",
+    "detect_sources",
+    "difference_image",
+    "epoch_time_bounds",
+    "inject_transients",
     "make_survey",
+    "match_detections",
     "scan_budget",
     "sparse_pack_index",
     "stack_plans",

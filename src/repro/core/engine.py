@@ -209,6 +209,12 @@ class JobStats:
     bricks_missed: int = 0
     bricks_spilled: int = 0
     residual_packs_scanned: int = 0
+    # Robust-reduction accounting (DESIGN.md §11): which reduction variant
+    # produced this result ("mean" | "clipped" | "median") and how many
+    # monoidal passes over the windows it took (1 on the mean path and on
+    # every eager path — the fused program re-scans internally).
+    reduce: str = "mean"
+    reduce_passes: int = 1
 
 
 @dataclasses.dataclass
@@ -219,7 +225,12 @@ class CoaddResult:
 
     @property
     def normalized(self) -> np.ndarray:
-        return np.where(self.depth > 0, self.coadd / np.maximum(self.depth, 1e-6), 0.0)
+        # Exact masking, no epsilon clamp: robust clip masks make fractional
+        # depths (a 0.5-coverage border pixel) routine, and max(depth, 1e-6)
+        # would rescale them instead of dividing by the true weight.
+        return np.where(
+            self.depth > 0, self.coadd / np.where(self.depth > 0, self.depth, 1.0), 0.0
+        )
 
 
 def _query_vec(query: CoaddQuery) -> np.ndarray:
@@ -315,6 +326,32 @@ def _scan_coadd(
             c, d = reducer.reduce_local(tiles, covs)
         return (coadd + c, depth + d, contrib + accept.sum()), None
 
+    q = grid_ra.shape[0]
+    init = (
+        jnp.zeros((q, q), jnp.float32),
+        jnp.zeros((q, q), jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+    (coadd, depth, contrib), _ = _scan_packs(
+        body, init, pixels, wcs, ints, floats, psf_kernels, gate, pack_idx
+    )
+    return coadd, depth, contrib, gate.sum()
+
+
+def _scan_packs(body, init, pixels, wcs, ints, floats, psf_kernels, gate,
+                pack_idx):
+    """Shared pack-scan plumbing: dense xs, or sparse streamed gather.
+
+    ``body(carry, px, wv, ints_p, floats_p, kern_p, gate_p)`` is the per-pack
+    monoid step; the dense/sparse split (DESIGN.md §5) lives here once so the
+    mean scan and every robust pass (§11) iterate packs identically — which
+    is what makes their per-pixel accumulation orders, and therefore the
+    bitwise streaming/brick parity arguments, line up across reducers.
+
+    Returns ``(carry, ys)``: bodies that emit per-pack outputs (the resident
+    warp cache in `_robust_passes`) get them stacked along a leading pack
+    axis; monoid-only bodies return None ys.
+    """
     if pack_idx is None:
         def step(carry, xs):
             px, wv, ints_p, floats_p, kern_p, gate_p = xs
@@ -331,14 +368,7 @@ def _scan_coadd(
 
         xs = (pack_idx, gate)
 
-    q = grid_ra.shape[0]
-    init = (
-        jnp.zeros((q, q), jnp.float32),
-        jnp.zeros((q, q), jnp.float32),
-        jnp.zeros((), jnp.int32),
-    )
-    (coadd, depth, contrib), _ = jax.lax.scan(step, init, xs)
-    return coadd, depth, contrib, gate.sum()
+    return jax.lax.scan(step, init, xs)
 
 
 @partial(jax.jit, static_argnames=("use_kernel", "block_rows", "interpret"))
@@ -414,6 +444,315 @@ def _coadd_scan_batch_sparse(
         )
 
     return jax.vmap(one)(gates, qvecs, grids_ra, grids_dec)
+
+
+# ----- robust reductions: monoidal pass programs (DESIGN.md §11) -----------
+#
+# Sigma-clipped and median stacks are not accumulate-only monoids, but they
+# decompose into passes that are: moments (S0, S1, S2), an optional binapprox
+# histogram, and a clip re-scan whose center/radius arrive as fixed operands.
+# Each pass below is the same pack scan as `_scan_coadd` with a different
+# per-pack monoid, so the streaming windows, journals, and brick tiles reuse
+# every existing mechanism — they just run more passes.
+
+def _scan_moments(
+    pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+    use_kernel, block_rows, interpret, pack_idx=None,
+):
+    """Robust pass 1: coverage-weighted moments of the stack, ONE program."""
+
+    def body(carry, px, wv, ints_p, floats_p, kern_p, gate_p):
+        s0, s1, s2, contrib = carry
+        accept = _accept_from_meta(ints_p, floats_p, qvec) & gate_p
+        if use_kernel:
+            a0, a1, a2 = warp_ops.coadd_moments(
+                px, wv, accept.astype(jnp.float32), grid_ra, grid_dec,
+                psf_kernels=kern_p, block_rows=block_rows, interpret=interpret,
+            )
+        else:
+            tiles, covs = mapper.map_batch(
+                px, wv, accept, grid_ra, grid_dec, psf_kernels=kern_p
+            )
+            a0, a1, a2 = reducer.moments_local(tiles, covs)
+        return (s0 + a0, s1 + a1, s2 + a2, contrib + accept.sum()), None
+
+    q = grid_ra.shape[0]
+    z = jnp.zeros((q, q), jnp.float32)
+    init = (z, z, z, jnp.zeros((), jnp.int32))
+    (s0, s1, s2, contrib), _ = _scan_packs(
+        body, init, pixels, wcs, ints, floats, psf_kernels, gate, pack_idx
+    )
+    return s0, s1, s2, contrib, gate.sum()
+
+
+def _scan_hist(
+    pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+    lo, inv_w, nbins, use_kernel, block_rows, interpret, pack_idx=None,
+):
+    """Median round 1: coverage-weighted binapprox histogram, ONE program."""
+
+    def body(hist, px, wv, ints_p, floats_p, kern_p, gate_p):
+        accept = _accept_from_meta(ints_p, floats_p, qvec) & gate_p
+        if use_kernel:
+            h = warp_ops.coadd_hist(
+                px, wv, accept.astype(jnp.float32), grid_ra, grid_dec,
+                lo, inv_w, nbins=nbins, psf_kernels=kern_p,
+                block_rows=block_rows, interpret=interpret,
+            )
+        else:
+            tiles, covs = mapper.map_batch(
+                px, wv, accept, grid_ra, grid_dec, psf_kernels=kern_p
+            )
+            h = reducer.hist_local(tiles, covs, lo, inv_w, nbins)
+        return hist + h, None
+
+    q = grid_ra.shape[0]
+    init = jnp.zeros((nbins, q, q), jnp.float32)
+    return _scan_packs(
+        body, init, pixels, wcs, ints, floats, psf_kernels, gate, pack_idx
+    )[0]
+
+
+def _scan_clip(
+    pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+    center, thresh, use_kernel, block_rows, interpret, pack_idx=None,
+):
+    """Robust final pass: accumulate only samples inside the clip window."""
+
+    def body(carry, px, wv, ints_p, floats_p, kern_p, gate_p):
+        coadd, depth = carry
+        accept = _accept_from_meta(ints_p, floats_p, qvec) & gate_p
+        if use_kernel:
+            c, d = warp_ops.coadd_clip(
+                px, wv, accept.astype(jnp.float32), grid_ra, grid_dec,
+                center, thresh, psf_kernels=kern_p,
+                block_rows=block_rows, interpret=interpret,
+            )
+        else:
+            tiles, covs = mapper.map_batch(
+                px, wv, accept, grid_ra, grid_dec, psf_kernels=kern_p
+            )
+            c, d = reducer.clip_local(tiles, covs, center, thresh)
+        return (coadd + c, depth + d), None
+
+    q = grid_ra.shape[0]
+    z = jnp.zeros((q, q), jnp.float32)
+    return _scan_packs(
+        body, (z, z), pixels, wcs, ints, floats, psf_kernels, gate, pack_idx
+    )[0]
+
+
+def _robust_passes(
+    pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+    clip_k, use_kernel, block_rows, interpret, reduce, median_bins,
+    pack_idx=None,
+):
+    """All robust passes composed in one traceable program (the eager path).
+
+    Identical operand math to the streaming multi-pass contract — fusing
+    only removes the host round-trips between passes, so the eager and
+    streaming results agree to float tolerance (XLA may fuse the in-program
+    center/threshold arithmetic differently from the between-pass jits).
+
+    XLA path: the multi-pass schedule re-warps every sample per pass —
+    mandatory for streaming windows, where the warped stack must never be
+    resident, but a 2-3x warp tax when the layout already is.  So the eager
+    XLA program warps each gated pack ONCE (the pack scan emits the warped
+    (tiles, covs) as stacked scan outputs) and runs the whole estimator as
+    `reducer.robust_local` over the stored stack: the clipped mean costs
+    ~1 warp + cheap moments instead of 2 full warps.  The warped stack
+    (n_packs*capacity, npix, npix) is resident for the dispatch — budget-
+    bounded engines take the streaming multi-pass path instead, so this
+    never competes with a device-memory budget.  The Pallas lane keeps the
+    per-pass schedule: its fused warp+reduce kernels never materialize
+    tiles, which is their point.
+    """
+    if not use_kernel:
+        # Keep the warp body untouched (anything added to it — moment
+        # partials in the carry or as extra scan outputs — measures
+        # 20-30% slower end to end; XLA's scan codegen degrades once the
+        # body grows reductions) and run the whole estimator over the
+        # stored stack instead.
+        def body(contrib, px, wv, ints_p, floats_p, kern_p, gate_p):
+            accept = _accept_from_meta(ints_p, floats_p, qvec) & gate_p
+            tiles, covs = mapper.map_batch(
+                px, wv, accept, grid_ra, grid_dec, psf_kernels=kern_p
+            )
+            return contrib + accept.sum(), (tiles, covs)
+
+        contrib, (tiles, covs) = _scan_packs(
+            body, jnp.zeros((), jnp.int32), pixels, wcs, ints, floats,
+            psf_kernels, gate, pack_idx,
+        )
+        q = grid_ra.shape[0]
+        coadd, depth = reducer.robust_local(
+            tiles.reshape(-1, q, q), covs.reshape(-1, q, q),
+            reduce, clip_k, median_bins,
+        )
+        return coadd, depth, contrib, gate.sum()
+
+    s0, s1, s2, contrib, considered = _scan_moments(
+        pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+        use_kernel, block_rows, interpret, pack_idx=pack_idx,
+    )
+    mu, sigma = reducer.clip_stats(s0, s1, s2)
+    if reduce == "median":
+        lo, w, inv_w = reducer.hist_bounds(s0, s1, s2, median_bins)
+        hist = _scan_hist(
+            pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra,
+            grid_dec, lo, inv_w, median_bins, use_kernel, block_rows,
+            interpret, pack_idx=pack_idx,
+        )
+        center = reducer.hist_median(hist, s0, lo, w)
+    else:
+        center = mu
+    thresh = reducer.clip_threshold(center, sigma, clip_k)
+    coadd, depth = _scan_clip(
+        pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+        center, thresh, use_kernel, block_rows, interpret, pack_idx=pack_idx,
+    )
+    return coadd, depth, contrib, considered
+
+
+@partial(jax.jit, static_argnames=(
+    "use_kernel", "block_rows", "interpret", "reduce", "median_bins"))
+def _robust_scan(
+    pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+    clip_k, use_kernel=False, block_rows=8, interpret=True,
+    reduce="clipped", median_bins=16, pack_idx=None,
+):
+    """One robust plan against a resident layout — still ONE dispatch."""
+    return _robust_passes(
+        pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+        clip_k, use_kernel, block_rows, interpret, reduce, median_bins,
+        pack_idx=pack_idx,
+    )
+
+
+@partial(jax.jit, static_argnames=(
+    "use_kernel", "block_rows", "interpret", "reduce", "median_bins"))
+def _robust_scan_batch(
+    pixels, wcs, ints, floats, psf_kernels, gates, qvecs, grids_ra, grids_dec,
+    clip_k, use_kernel=False, block_rows=8, interpret=True,
+    reduce="clipped", median_bins=16, pack_idx=None,
+):
+    """K stacked robust plans, ONE dispatch (shared sparse index, like
+    `_coadd_scan_batch_sparse`)."""
+
+    def one(gate, qvec, grid_ra, grid_dec):
+        return _robust_passes(
+            pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra,
+            grid_dec, clip_k, use_kernel, block_rows, interpret, reduce,
+            median_bins, pack_idx=pack_idx,
+        )
+
+    return jax.vmap(one)(gates, qvecs, grids_ra, grids_dec)
+
+
+# Streaming per-pass entry points: one jitted dispatch per (window, pass),
+# returning additive partial tuples the WindowTracker can journal/resume.
+@partial(jax.jit, static_argnames=("use_kernel", "block_rows", "interpret"))
+def _moments_scan_sparse(
+    pixels, wcs, ints, floats, psf_kernels, pack_idx, gate, qvec,
+    grid_ra, grid_dec, use_kernel=False, block_rows=8, interpret=True,
+):
+    return _scan_moments(
+        pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+        use_kernel, block_rows, interpret, pack_idx=pack_idx,
+    )
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_rows", "interpret",
+                                   "nbins"))
+def _hist_scan_sparse(
+    pixels, wcs, ints, floats, psf_kernels, pack_idx, gate, qvec,
+    grid_ra, grid_dec, lo, inv_w, nbins=16, use_kernel=False, block_rows=8,
+    interpret=True,
+):
+    return (_scan_hist(
+        pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+        lo, inv_w, nbins, use_kernel, block_rows, interpret,
+        pack_idx=pack_idx,
+    ),)
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_rows", "interpret"))
+def _clip_scan_sparse(
+    pixels, wcs, ints, floats, psf_kernels, pack_idx, gate, qvec,
+    grid_ra, grid_dec, center, thresh, use_kernel=False, block_rows=8,
+    interpret=True,
+):
+    return _scan_clip(
+        pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra, grid_dec,
+        center, thresh, use_kernel, block_rows, interpret, pack_idx=pack_idx,
+    )
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_rows", "interpret"))
+def _moments_scan_batch_sparse(
+    pixels, wcs, ints, floats, psf_kernels, pack_idx, gates, qvecs,
+    grids_ra, grids_dec, use_kernel=False, block_rows=8, interpret=True,
+):
+    def one(gate, qvec, grid_ra, grid_dec):
+        return _scan_moments(
+            pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra,
+            grid_dec, use_kernel, block_rows, interpret, pack_idx=pack_idx,
+        )
+
+    return jax.vmap(one)(gates, qvecs, grids_ra, grids_dec)
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_rows", "interpret",
+                                   "nbins"))
+def _hist_scan_batch_sparse(
+    pixels, wcs, ints, floats, psf_kernels, pack_idx, gates, qvecs,
+    grids_ra, grids_dec, los, inv_ws, nbins=16, use_kernel=False,
+    block_rows=8, interpret=True,
+):
+    def one(gate, qvec, grid_ra, grid_dec, lo, inv_w):
+        return (_scan_hist(
+            pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra,
+            grid_dec, lo, inv_w, nbins, use_kernel, block_rows, interpret,
+            pack_idx=pack_idx,
+        ),)
+
+    return jax.vmap(one)(gates, qvecs, grids_ra, grids_dec, los, inv_ws)
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "block_rows", "interpret"))
+def _clip_scan_batch_sparse(
+    pixels, wcs, ints, floats, psf_kernels, pack_idx, gates, qvecs,
+    grids_ra, grids_dec, centers, threshs, use_kernel=False, block_rows=8,
+    interpret=True,
+):
+    def one(gate, qvec, grid_ra, grid_dec, center, thresh):
+        return _scan_clip(
+            pixels, wcs, ints, floats, psf_kernels, gate, qvec, grid_ra,
+            grid_dec, center, thresh, use_kernel, block_rows, interpret,
+            pack_idx=pack_idx,
+        )
+
+    return jax.vmap(one)(gates, qvecs, grids_ra, grids_dec, centers, threshs)
+
+
+# Between-pass operand computation, jitted so the streaming passes share one
+# compiled formula (the center/threshold math never runs on the host).
+@jax.jit
+def _clip_operands(s0, s1, s2, clip_k):
+    mu, sigma = reducer.clip_stats(s0, s1, s2)
+    return mu, reducer.clip_threshold(mu, sigma, clip_k)
+
+
+@partial(jax.jit, static_argnames=("nbins",))
+def _hist_operands(s0, s1, s2, nbins=16):
+    return reducer.hist_bounds(s0, s1, s2, nbins)
+
+
+@jax.jit
+def _median_operands(hist, s0, s1, s2, lo, w, clip_k):
+    _, sigma = reducer.clip_stats(s0, s1, s2)
+    center = reducer.hist_median(hist, s0, lo, w)
+    return center, reducer.clip_threshold(center, sigma, clip_k)
 
 
 @jax.jit
@@ -496,8 +835,16 @@ class CoaddEngine:
         brick_npix: int = 64,
         journal_dir: Optional[str] = None,
         journal_max_age_s: float = 7 * 86400.0,
+        clip_k: float = 3.0,
+        median_bins: int = 16,
     ):
         self.survey = survey
+        # Robust-reduction knobs (DESIGN.md §11): the sigma-clip radius and
+        # the binapprox histogram resolution shared by every executor.  Part
+        # of `result_key` for robust plans — two engines with different knobs
+        # must never share cached bytes.
+        self.clip_k = float(clip_k)
+        self.median_bins = int(median_bins)
         self.use_kernel = use_kernel
         self.block_rows = block_rows  # None -> autotune per (npix, H, W)
         self.kernel_interpret = kernel_interpret
@@ -955,10 +1302,19 @@ class CoaddEngine:
         )
 
     # ----- planning: the six methods differ ONLY in gate construction -----
-    def plan(self, query: CoaddQuery, method: str) -> CoaddPlan:
+    def plan(self, query: CoaddQuery, method: str,
+             reduce: str = "mean") -> CoaddPlan:
         if method not in METHODS:
             raise ValueError(f"unknown method {method}; expected one of {METHODS}")
-        return getattr(self, f"plan_{method}")(query)
+        if reduce not in reducer.REDUCERS:
+            raise ValueError(
+                f"unknown reduce {reduce!r}; expected one of {reducer.REDUCERS}"
+            )
+        plan = getattr(self, f"plan_{method}")(query)
+        # The reduction variant is plan state (it changes the result bytes):
+        # set after the method planner so all six stay reduce-agnostic.
+        plan.reduce = reduce
+        return plan
 
     def plan_raw_fits(self, query: CoaddQuery) -> CoaddPlan:
         ds = self.dataset("per_file")
@@ -1147,9 +1503,17 @@ class CoaddEngine:
             stats,
         )
 
+    def _retire_journal(self, job_key: str) -> None:
+        """Drop a completed job's window journal (memory + disk)."""
+        old = self._journals.pop(job_key, None)
+        if hasattr(old, "close"):
+            old.close()
+        if self.journal_store is not None:
+            self.journal_store.remove(job_key)
+
     def _run_stream_windows(self, layout: str, exec_ds: PackedDataset,
                             windows: List[ScanWindow], dispatch,
-                            job_key: str):
+                            job_key: str, keep_journal: bool = False):
         """Walk a window schedule: dispatch each window against its
         resident chunk, prefetch the next chunk (its async `device_put`
         rides behind the in-flight scan — the double buffer), accumulate
@@ -1229,12 +1593,13 @@ class CoaddEngine:
             # Completed: the journal has served its purpose.  (A kill or a
             # fatal error raises out above this line, *keeping* the journal
             # — that asymmetry is the resume contract, in-memory and on
-            # disk alike; only clean completion garbage-collects.)
-            old = self._journals.pop(job_key, None)
-            if hasattr(old, "close"):
-                old.close()
-            if self.journal_store is not None:
-                self.journal_store.remove(job_key)
+            # disk alike; only clean completion garbage-collects.)  Robust
+            # multi-pass jobs (§11) pass ``keep_journal=True``: a pass's
+            # journal must outlive its own completion so a kill *between*
+            # passes still replays it — the orchestrator retires every pass
+            # journal together once the final pass completes.
+            if not keep_journal:
+                self._retire_journal(job_key)
             fc, quarantined = tracker.counters, tuple(quarantined)
         _sync(acc[0])
         elapsed = time.perf_counter() - t1
@@ -1334,6 +1699,141 @@ class CoaddEngine:
         )
         return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
 
+    def _reduce_tag(self, method: str, reduce: str, pass_tag: str) -> str:
+        """Journal-identity tag of one robust pass: the method plus every
+        engine knob that changes the pass's partial bytes, plus which pass
+        this is — pass-1 moments and final clip partials of one query must
+        never share a journal."""
+        return (
+            f"{method}|reduce={reduce}|k={self.clip_k}"
+            f"|b={self.median_bins}|pass={pass_tag}"
+        )
+
+    def _execute_streaming_robust(self, plan: CoaddPlan) -> CoaddResult:
+        """Robust reduce under a device budget: the multi-pass contract (§11).
+
+        Each pass is an ordinary monoidal window stream: pass 1 accumulates
+        the moments partials; ``median`` adds a binapprox-histogram pass;
+        the final pass re-scans with the clip center/radius as fixed device
+        operands.  Every pass journals under its own pass-tagged job key
+        with ``keep_journal=True``, so a kill at ANY point — mid-pass or on
+        the seam between passes — resumes by replaying the journaled
+        windows bitwise; only when the final pass completes cleanly are all
+        pass journals retired together.  Operands are recomputed from the
+        replayed pass-1 partials on resume, so the recovered stack is
+        bitwise-identical to the uninterrupted one.
+        """
+        ds = self.dataset(plan.layout)
+        exec_ds, _ = self.exec_dataset(plan.layout)
+        gate = self._exec_gate(plan)
+        if not gate.any():
+            res = self._empty_streaming_result(plan)
+            res.stats.reduce = plan.reduce
+            return res
+        grid_ra, grid_dec = self._plan_grids(plan)
+        block_rows = self._block_rows(plan.query, ds)
+        windows = self._stream_windows(exec_ds, gate.any(axis=1))
+        qvec = jnp.asarray(plan.qvec)
+        m_builds0, d0 = self.matched_builds, self.dispatch_count
+        up = hi = ev = 0
+        elapsed = 0.0
+        fc = FaultCounters()
+        pass_keys: List[str] = []
+        quar: Tuple[int, ...] = ()
+
+        def run_pass(tag: str, pass_fn, *extra):
+            nonlocal up, hi, ev, elapsed, quar
+
+            def dispatch(dev, kern, win, dropped):
+                g = gate
+                if dropped:
+                    g = gate.copy()
+                    g[sorted(dropped)] = False
+                self.dispatch_count += 1
+                return pass_fn(
+                    dev.pixels, dev.wcs, dev.ints, dev.floats, kern,
+                    jnp.asarray(win.pack_idx),
+                    jnp.asarray(compact_window_gate(g, win)),
+                    qvec, grid_ra, grid_dec, *extra,
+                    use_kernel=self.use_kernel, block_rows=block_rows,
+                    interpret=self.kernel_interpret,
+                )
+
+            # Computed per pass, not once: a quarantine during an earlier
+            # pass changes the registry, and this pass's partials must be
+            # keyed by the pack set they actually scanned.
+            job_key = self._job_key(
+                self._reduce_tag(plan.method, plan.reduce, tag),
+                plan.layout, gate, plan.qvec, plan.query.npix, windows,
+                grid_tag=self._grid_tag(plan),
+            )
+            pass_keys.append(job_key)
+            acc, counters, dt, pfc, pquar = self._run_stream_windows(
+                plan.layout, exec_ds, windows, dispatch, job_key,
+                keep_journal=True,
+            )
+            up, hi, ev = up + counters[0], hi + counters[1], ev + counters[2]
+            elapsed += dt
+            fc.retries += pfc.retries
+            fc.speculative_windows += pfc.speculative_windows
+            fc.quarantined_packs += pfc.quarantined_packs
+            fc.resumed_windows += pfc.resumed_windows
+            quar = tuple(sorted(set(quar) | set(pquar)))
+            return acc
+
+        clip_k = jnp.float32(self.clip_k)
+        n_passes = 2
+        s0, s1, s2, contrib, considered = run_pass(
+            "moments", _moments_scan_sparse
+        )
+        if plan.reduce == "median":
+            n_passes = 3
+            lo, w, inv_w = _hist_operands(s0, s1, s2, nbins=self.median_bins)
+            nb = self.median_bins
+            (hist,) = run_pass(
+                "hist",
+                lambda *a, **kw: _hist_scan_sparse(*a, nbins=nb, **kw),
+                lo, inv_w,
+            )
+            center, thresh = _median_operands(hist, s0, s1, s2, lo, w, clip_k)
+        else:
+            center, thresh = _clip_operands(s0, s1, s2, clip_k)
+        coadd, depth = run_pass("clip", _clip_scan_sparse, center, thresh)
+        # The whole job completed: every pass journal is now garbage.
+        for key in pass_keys:
+            self._retire_journal(key)
+        quar = tuple(p for p in quar if gate[p].any())
+        stats = JobStats(
+            method=plan.method,
+            files_considered=int(considered),
+            files_contributing=int(contrib),
+            packs_touched=plan.packs_touched,
+            t_locate_s=plan.t_locate_s,
+            t_map_reduce_s=elapsed,
+            t_total_s=plan.t_locate_s + elapsed,
+            dispatches=self.dispatch_count - d0,
+            packs_gated=int(gate.any(axis=1).sum()),
+            packs_scanned=n_passes * sum(w.budget for w in windows),
+            scan_budget=max(w.budget for w in windows),
+            windows=n_passes * len(windows),
+            chunk_uploads=up,
+            residency_hits=hi,
+            residency_evictions=ev,
+            matched_cache_builds=self.matched_builds - m_builds0,
+            matched_cache_hits=hi if self._matched_mode() else 0,
+            peak_resident_bytes=self._peak_resident_bytes(),
+            retries=fc.retries,
+            speculative_windows=fc.speculative_windows,
+            quarantined_packs=fc.quarantined_packs,
+            resumed_windows=fc.resumed_windows,
+            partial=bool(quar),
+            uncovered_packs=quar,
+            requarantine_released=self._take_requarantine_released(),
+            reduce=plan.reduce,
+            reduce_passes=n_passes,
+        )
+        return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
+
     # ----- execution: one dispatch against resident data -----
     def execute(self, plan: CoaddPlan) -> CoaddResult:
         """One-dispatch query: device-resident packs + (P, cap) slot gate.
@@ -1347,6 +1847,8 @@ class CoaddEngine:
         """
         self._check_plan_psf(plan)
         if self.device_budget_bytes is not None:
+            if plan.reduce != "mean":
+                return self._execute_streaming_robust(plan)
             return self._execute_streaming(plan)
         ds = self.dataset(plan.layout)
         exec_ds, _ = self.exec_dataset(plan.layout)
@@ -1364,7 +1866,32 @@ class CoaddEngine:
         sp = self._sparse_index(gate)
         t1 = time.perf_counter()
         self.dispatch_count += 1
-        if sp is not None:
+        if plan.reduce != "mean":
+            # Robust eager path: all passes fused into ONE jitted dispatch
+            # (the in-program re-scan is what keeps clipped within the
+            # perf-gate overhead budget vs the mean).
+            gate_dev = (jnp.asarray(compact_gate(gate, sp)) if sp is not None
+                        else jnp.asarray(gate))
+            pack_idx = jnp.asarray(sp.pack_idx) if sp is not None else None
+            coadd, depth, contrib, considered = _robust_scan(
+                dev.pixels,
+                dev.wcs,
+                dev.ints,
+                dev.floats,
+                psf_kernels,
+                gate_dev,
+                jnp.asarray(plan.qvec),
+                grid_ra,
+                grid_dec,
+                jnp.float32(self.clip_k),
+                use_kernel=self.use_kernel,
+                block_rows=block_rows,
+                interpret=self.kernel_interpret,
+                reduce=plan.reduce,
+                median_bins=self.median_bins,
+                pack_idx=pack_idx,
+            )
+        elif sp is not None:
             coadd, depth, contrib, considered = _coadd_scan_sparse(
                 dev.pixels,
                 dev.wcs,
@@ -1413,6 +1940,7 @@ class CoaddEngine:
             matched_cache_builds=self.matched_builds - m_builds0,
             matched_cache_hits=m_hits,
             peak_resident_bytes=self._peak_resident_bytes(),
+            reduce=plan.reduce,
         )
         return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
 
@@ -1450,19 +1978,22 @@ class CoaddEngine:
             )
 
     def run(self, query: CoaddQuery, method: str,
-            use_bricks: bool = False) -> CoaddResult:
+            use_bricks: bool = False, reduce: str = "mean") -> CoaddResult:
         """Plan + execute one query.
 
         With ``use_bricks=True`` (DESIGN.md §9) a brick-aligned query is
         served by mosaicking cached brick coadds — materializing any
         missing bricks inline — and an unaligned query falls back to the
         ordinary path transparently (its stats carry zero brick counters).
+        ``reduce`` picks the stacking estimator (DESIGN.md §11): "mean",
+        "clipped" (k-sigma-clipped mean), or "median" (two-round
+        median+clip); bricks are materialized and cached per estimator.
         """
         if use_bricks:
-            res = self._run_bricks(query, method)
+            res = self._run_bricks(query, method, reduce)
             if res is not None:
                 return res
-        return self.execute(self.plan(query, method))
+        return self.execute(self.plan(query, method, reduce))
 
     # ----- brick-tessellated materialized coadds (DESIGN.md §9) -----
     @property
@@ -1474,21 +2005,30 @@ class CoaddEngine:
             )
         return self._brick_grid
 
-    def _brick_key(self, band: str, row: int, col: int) -> Tuple:
+    def _brick_key(self, band: str, row: int, col: int,
+                   reduce: str = "mean") -> Tuple:
         """BrickStore identity of one materialized (brick, band) cell.
 
         Carries `_psf_state()` so a retuned engine misses and
         re-materializes instead of mosaicking tiles homogenized to a
         different target — staleness by key, the same contract as every
-        other derived-residency cache.
+        other derived-residency cache.  Robust estimators extend the key
+        (with their clip knobs — retuning k or the bin count must miss);
+        mean keys stay exactly the pre-§11 shape so existing stores and
+        spills remain valid.
         """
-        return ("brick", band, row, col, self._psf_state())
+        key = ("brick", band, row, col, self._psf_state())
+        if reduce != "mean":
+            key += (reduce, self.clip_k, self.median_bins)
+        return key
 
     def _brick_plan(self, band: str, row: int, col: int,
-                    method: str) -> CoaddPlan:
+                    method: str, reduce: str = "mean") -> CoaddPlan:
         """The materialization plan for one brick: a normal planned query
         whose output grid is overridden onto the global lattice tile."""
-        plan = self.plan(self.brick_grid.brick_query(row, col, band), method)
+        plan = self.plan(
+            self.brick_grid.brick_query(row, col, band), method, reduce
+        )
         plan.grid_sky = self.brick_grid.brick_sky(row, col)
         return plan
 
@@ -1505,13 +2045,19 @@ class CoaddEngine:
         coadds, so a serving layer may answer the second request from the
         first's cached output.
         """
-        return (
+        key = (
             f"{plan.fingerprint}|{self._psf_state()}"
             f"|k{int(self.use_kernel)}|s{int(self.sparse)}"
             f"|b{self.device_budget_bytes}"
         )
+        if plan.reduce != "mean":
+            # Robust knobs are engine state, not plan state — two engines
+            # with different clip-k must not share a cached clipped stack.
+            key += f"|ck{self.clip_k}|mb{self.median_bins}"
+        return key
 
-    def warm_brick_cover(self, query: CoaddQuery) -> Optional[BrickCover]:
+    def warm_brick_cover(self, query: CoaddQuery,
+                         reduce: str = "mean") -> Optional[BrickCover]:
         """This query's brick cover iff *every* covered tile is stored.
 
         The serving front end routes such queries straight to the
@@ -1525,12 +2071,13 @@ class CoaddEngine:
         if cover is None:
             return None
         store = self.brick_store
-        if all(store.contains(self._brick_key(query.band, r, c))
+        if all(store.contains(self._brick_key(query.band, r, c, reduce))
                for r, c in cover.bricks):
             return cover
         return None
 
-    def run_window(self, query: CoaddQuery, method: str) -> CoaddResult:
+    def run_window(self, query: CoaddQuery, method: str,
+                   reduce: str = "mean") -> CoaddResult:
         """The brick-free baseline for a brick-aligned query: one fresh
         scan onto the lattice-window grid.  This is the path
         `run(use_bricks=True)` must match bitwise — same lattice pixels,
@@ -1542,14 +2089,14 @@ class CoaddEngine:
                 "query is not brick-aligned; run_window only serves "
                 "lattice-window queries (see BrickGrid.window_query)"
             )
-        plan = self.plan(query, method)
+        plan = self.plan(query, method, reduce)
         plan.grid_sky = self.brick_grid.window_sky(
             cover.r0, cover.r1, cover.c0, cover.c1
         )
         return self.execute(plan)
 
-    def _run_bricks(self, query: CoaddQuery,
-                    method: str) -> Optional[CoaddResult]:
+    def _run_bricks(self, query: CoaddQuery, method: str,
+                    reduce: str = "mean") -> Optional[CoaddResult]:
         """Serve a brick-aligned query from the BrickStore, or None.
 
         Decomposes the query into its brick cover, fetches every covered
@@ -1573,7 +2120,7 @@ class CoaddEngine:
         missing: List[int] = []
         for i, (r, c) in enumerate(cover.bricks):
             offsets.append(((r - cover.r0) * b, (c - cover.c0) * b))
-            got = store.fetch(self._brick_key(query.band, r, c))
+            got = store.fetch(self._brick_key(query.band, r, c, reduce))
             if got is None:
                 missing.append(i)
                 tiles.append(None)
@@ -1594,7 +2141,9 @@ class CoaddEngine:
         residual = JobStats("", 0, 0, 0, 0.0, 0.0, 0.0, dispatches=0)
         for i in missing:
             r, c = cover.bricks[i]
-            res = self.execute(self._brick_plan(query.band, r, c, method))
+            res = self.execute(
+                self._brick_plan(query.band, r, c, method, reduce)
+            )
             meta = BrickMeta(
                 partial=res.stats.partial,
                 uncovered_packs=res.stats.uncovered_packs,
@@ -1602,7 +2151,8 @@ class CoaddEngine:
                 files_contributing=res.stats.files_contributing,
             )
             coadd_dev, depth_dev = store.put(
-                self._brick_key(query.band, r, c), res.coadd, res.depth, meta
+                self._brick_key(query.band, r, c, reduce),
+                res.coadd, res.depth, meta,
             )
             tiles[i] = coadd_dev
             covs[i] = depth_dev
@@ -1624,6 +2174,8 @@ class CoaddEngine:
             residual.speculative_windows += s.speculative_windows
             residual.quarantined_packs += s.quarantined_packs
             residual.resumed_windows += s.resumed_windows
+            residual.reduce_passes = max(residual.reduce_passes,
+                                         s.reduce_passes)
         t1 = time.perf_counter()
         self.dispatch_count += 1
         coadd, depth = _mosaic_bricks(
@@ -1668,6 +2220,8 @@ class CoaddEngine:
             bricks_missed=len(missing),
             bricks_spilled=spills,
             residual_packs_scanned=residual.packs_scanned,
+            reduce=reduce,
+            reduce_passes=residual.reduce_passes if missing else 1,
         )
         return CoaddResult(np.asarray(coadd), np.asarray(depth), stats)
 
@@ -1676,6 +2230,7 @@ class CoaddEngine:
         bands: Sequence[str] = ("r",),
         region: Optional[Tuple[Tuple[float, float], Tuple[float, float]]] = None,
         method: str = "sql_structured",
+        reduce: str = "mean",
     ) -> MaterializeReport:
         """Batch-materialize the (brick, band) lattice into the BrickStore.
 
@@ -1700,15 +2255,16 @@ class CoaddEngine:
 
         def is_done(task: BrickTask) -> bool:
             return self.brick_store.contains(
-                self._brick_key(task.band, task.row, task.col)
+                self._brick_key(task.band, task.row, task.col, reduce)
             )
 
         def run_one(task: BrickTask) -> None:
             res = self.execute(
-                self._brick_plan(task.band, task.row, task.col, method)
+                self._brick_plan(task.band, task.row, task.col, method,
+                                 reduce)
             )
             self.brick_store.put(
-                self._brick_key(task.band, task.row, task.col),
+                self._brick_key(task.band, task.row, task.col, reduce),
                 res.coadd,
                 res.depth,
                 BrickMeta(
@@ -1727,13 +2283,16 @@ class CoaddEngine:
 
     # ----- batched multi-query jobs (paper Fig. 5) -----
     def run_batch(
-        self, queries: Sequence[CoaddQuery], method: str
+        self, queries: Sequence[CoaddQuery], method: str,
+        reduce: str = "mean",
     ) -> List[CoaddResult]:
         """K same-method queries as ONE jitted dispatch over one layout."""
         queries = list(queries)
         if not queries:
             return []
-        return self.execute_batch([self.plan(q, method) for q in queries])
+        return self.execute_batch(
+            [self.plan(q, method, reduce) for q in queries]
+        )
 
     def execute_batch(self, plans: Sequence[CoaddPlan]) -> List[CoaddResult]:
         """Stacked plans -> one vmapped scan dispatch -> per-query results.
@@ -1768,7 +2327,32 @@ class CoaddEngine:
         sp = self._sparse_index(gates)
         t1 = time.perf_counter()
         self.dispatch_count += 1
-        if sp is not None:
+        if plans[0].reduce != "mean":
+            # Robust batch, still ONE dispatch: the fused per-query passes
+            # vmap over the stacked gates/grids (stack_plans guarantees one
+            # shared reduce for the whole batch).
+            gates_dev = (jnp.asarray(compact_gates(gates, sp))
+                         if sp is not None else jnp.asarray(gates))
+            pack_idx = jnp.asarray(sp.pack_idx) if sp is not None else None
+            coadds, depths, contribs, considered = _robust_scan_batch(
+                dev.pixels,
+                dev.wcs,
+                dev.ints,
+                dev.floats,
+                psf_kernels,
+                gates_dev,
+                jnp.asarray(qvecs),
+                grids_ra,
+                grids_dec,
+                jnp.float32(self.clip_k),
+                use_kernel=self.use_kernel,
+                block_rows=block_rows,
+                interpret=self.kernel_interpret,
+                reduce=plans[0].reduce,
+                median_bins=self.median_bins,
+                pack_idx=pack_idx,
+            )
+        elif sp is not None:
             coadds, depths, contribs, considered = _coadd_scan_batch_sparse(
                 dev.pixels,
                 dev.wcs,
@@ -1826,6 +2410,7 @@ class CoaddEngine:
                 if i == 0 else 0,
                 matched_cache_hits=m_hits if i == 0 else 0,
                 peak_resident_bytes=self._peak_resident_bytes(),
+                reduce=p.reduce,
             )
             results.append(
                 CoaddResult(np.asarray(coadds[i]), np.asarray(depths[i]), stats)
@@ -1843,10 +2428,17 @@ class CoaddEngine:
         host syncs once at the end.
         """
         layout = plans[0].layout
+        if plans[0].reduce != "mean" and gates.any():
+            return self._execute_batch_streaming_robust(
+                plans, exec_ds, gates, qvecs, grids_ra, grids_dec, block_rows
+            )
         if not gates.any():
             # Empty union: every query selected nothing — answer zeros
             # without a window schedule (same contract as the single path).
-            return [self._empty_streaming_result(p) for p in plans]
+            res = [self._empty_streaming_result(p) for p in plans]
+            for p, r in zip(plans, res):
+                r.stats.reduce = p.reduce
+            return res
         union_any = gates.any(axis=0).any(axis=1)
         windows = self._stream_windows(exec_ds, union_any)
         qvecs_j = jnp.asarray(qvecs)
@@ -1924,6 +2516,131 @@ class CoaddEngine:
                 partial=bool(quar),
                 uncovered_packs=quar,
                 requarantine_released=released if i == 0 else 0,
+            )
+            results.append(
+                CoaddResult(np.asarray(coadds[i]), np.asarray(depths[i]), stats)
+            )
+        return results
+
+    def _execute_batch_streaming_robust(
+        self, plans, exec_ds, gates, qvecs, grids_ra, grids_dec, block_rows
+    ) -> List[CoaddResult]:
+        """Robust batch under a device budget: the §11 multi-pass contract
+        over the union window schedule.  Same journaling/retirement rules
+        as `_execute_streaming_robust`, vmapped over the batch's queries
+        (per-query clip operands ride the batch axis between passes)."""
+        layout = plans[0].layout
+        reduce = plans[0].reduce
+        union_any = gates.any(axis=0).any(axis=1)
+        windows = self._stream_windows(exec_ds, union_any)
+        qvecs_j = jnp.asarray(qvecs)
+        m_builds0, d0 = self.matched_builds, self.dispatch_count
+        up = hi = ev = 0
+        elapsed = 0.0
+        fc = FaultCounters()
+        pass_keys: List[str] = []
+        quar: Tuple[int, ...] = ()
+
+        def run_pass(tag: str, pass_fn, *extra):
+            nonlocal up, hi, ev, elapsed, quar
+
+            def dispatch(dev, kern, win, dropped):
+                g = gates
+                if dropped:
+                    g = gates.copy()
+                    g[:, sorted(dropped)] = False
+                self.dispatch_count += 1
+                return pass_fn(
+                    dev.pixels, dev.wcs, dev.ints, dev.floats, kern,
+                    jnp.asarray(win.pack_idx),
+                    jnp.asarray(compact_window_gates(g, win)),
+                    qvecs_j, grids_ra, grids_dec, *extra,
+                    use_kernel=self.use_kernel, block_rows=block_rows,
+                    interpret=self.kernel_interpret,
+                )
+
+            job_key = self._job_key(
+                "batch:" + self._reduce_tag(plans[0].method, reduce, tag),
+                layout, gates, qvecs, plans[0].npix, windows,
+                grid_tag="|".join(self._grid_tag(p) for p in plans),
+            )
+            pass_keys.append(job_key)
+            acc, counters, dt, pfc, pquar = self._run_stream_windows(
+                layout, exec_ds, windows, dispatch, job_key,
+                keep_journal=True,
+            )
+            up, hi, ev = up + counters[0], hi + counters[1], ev + counters[2]
+            elapsed += dt
+            fc.retries += pfc.retries
+            fc.speculative_windows += pfc.speculative_windows
+            fc.quarantined_packs += pfc.quarantined_packs
+            fc.resumed_windows += pfc.resumed_windows
+            quar = tuple(sorted(set(quar) | set(pquar)))
+            return acc
+
+        clip_k = jnp.float32(self.clip_k)
+        n_passes = 2
+        s0, s1, s2, contribs, considered = run_pass(
+            "moments", _moments_scan_batch_sparse
+        )
+        if reduce == "median":
+            n_passes = 3
+            nb = self.median_bins
+            los, ws, inv_ws = _hist_operands(s0, s1, s2, nbins=nb)
+            (hists,) = run_pass(
+                "hist",
+                lambda *a, **kw: _hist_scan_batch_sparse(*a, nbins=nb, **kw),
+                los, inv_ws,
+            )
+            centers, threshs = jax.vmap(
+                _median_operands, in_axes=(0, 0, 0, 0, 0, 0, None)
+            )(hists, s0, s1, s2, los, ws, clip_k)
+        else:
+            centers, threshs = _clip_operands(s0, s1, s2, clip_k)
+        coadds, depths = run_pass(
+            "clip", _clip_scan_batch_sparse, centers, threshs
+        )
+        for key in pass_keys:
+            self._retire_journal(key)
+        union_gate = gates.any(axis=0)
+        quar = tuple(p for p in quar if union_gate[p].any())
+        released = self._take_requarantine_released()
+        contribs = np.asarray(contribs)
+        considered = np.asarray(considered)
+        scanned = n_passes * sum(w.budget for w in windows)
+        results = []
+        for i, p in enumerate(plans):
+            t_mr = elapsed if i == 0 else 0.0
+            stats = JobStats(
+                method=p.method,
+                files_considered=int(considered[i]),
+                files_contributing=int(contribs[i]),
+                packs_touched=p.packs_touched,
+                t_locate_s=p.t_locate_s,
+                t_map_reduce_s=t_mr,
+                t_total_s=p.t_locate_s + t_mr,
+                dispatches=(self.dispatch_count - d0) if i == 0 else 0,
+                packs_gated=int(gates[i].any(axis=1).sum()),
+                packs_scanned=scanned if i == 0 else 0,
+                scan_budget=max(w.budget for w in windows),
+                windows=n_passes * len(windows),
+                chunk_uploads=up if i == 0 else 0,
+                residency_hits=hi if i == 0 else 0,
+                residency_evictions=ev if i == 0 else 0,
+                matched_cache_builds=(self.matched_builds - m_builds0)
+                if i == 0 else 0,
+                matched_cache_hits=hi
+                if (i == 0 and self._matched_mode()) else 0,
+                peak_resident_bytes=self._peak_resident_bytes(),
+                retries=fc.retries if i == 0 else 0,
+                speculative_windows=fc.speculative_windows if i == 0 else 0,
+                quarantined_packs=fc.quarantined_packs if i == 0 else 0,
+                resumed_windows=fc.resumed_windows if i == 0 else 0,
+                partial=bool(quar),
+                uncovered_packs=quar,
+                requarantine_released=released if i == 0 else 0,
+                reduce=p.reduce,
+                reduce_passes=n_passes,
             )
             results.append(
                 CoaddResult(np.asarray(coadds[i]), np.asarray(depths[i]), stats)

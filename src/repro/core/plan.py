@@ -57,6 +57,11 @@ class CoaddPlan:
     # global lattice, which is what makes mosaicked and fresh scans agree
     # bitwise; None (the default) keeps the per-query grid.
     grid_sky: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    # Reduction variant (DESIGN.md §11): "mean" is the paper's monoidal
+    # accumulate; "clipped"/"median" are the robust two-pass stacks.  Part
+    # of the plan because it changes both the executed program and the
+    # output bytes — caches, coalescing, and journals must distinguish it.
+    reduce: str = "mean"
 
     @property
     def npix(self) -> int:
@@ -79,18 +84,19 @@ class CoaddPlan:
         return scan_budget(self.packs_touched, self.gate.shape[0])
 
     @property
-    def coalesce_key(self) -> Tuple[str, int, str, Optional[float]]:
+    def coalesce_key(self) -> Tuple[str, int, str, Optional[float], str]:
         """Compatibility class for batching (DESIGN.md §10).
 
         Plans coalesce into one vmapped `run_batch` dispatch iff they share
         a resident layout, an output grid size (one static scan program), a
         grid override (brick-lattice plans must not stack with query-grid
-        plans), and a PSF target (executors reject cross-target plans).
-        This is exactly the precondition `stack_plans` validates, lifted to
-        a hashable key the dispatcher can group a queue by.
+        plans), a PSF target (executors reject cross-target plans), and a
+        reduction variant (a clipped batch runs a different program than a
+        mean batch).  This is exactly the precondition `stack_plans`
+        validates, lifted to a hashable key the dispatcher can group by.
         """
         return (self.layout, self.npix, grid_digest(self.grid_sky),
-                self.psf_target)
+                self.psf_target, self.reduce)
 
     @property
     def fingerprint(self) -> str:
@@ -106,7 +112,7 @@ class CoaddPlan:
         h = hashlib.sha256()
         h.update(
             f"{self.layout}|{self.npix}|{self.psf_target}"
-            f"|{grid_digest(self.grid_sky)}".encode()
+            f"|{grid_digest(self.grid_sky)}|{self.reduce}".encode()
         )
         h.update(np.ascontiguousarray(self.gate).tobytes())
         h.update(np.ascontiguousarray(self.qvec, np.float32).tobytes())
@@ -303,6 +309,9 @@ def stack_plans(plans: Sequence[CoaddPlan]) -> Tuple[np.ndarray, np.ndarray]:
     npixes = {p.npix for p in plans}
     if len(npixes) != 1:
         raise ValueError(f"batched plans must share npix, got {npixes}")
+    reduces = {p.reduce for p in plans}
+    if len(reduces) != 1:
+        raise ValueError(f"batched plans must share a reduce, got {reduces}")
     gates = np.stack([p.gate for p in plans])
     qvecs = np.stack([p.qvec for p in plans])
     return gates, qvecs

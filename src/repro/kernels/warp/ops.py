@@ -13,7 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.warp.warp import autotune_block_rows  # noqa: F401 (re-export)
+from repro.kernels.warp.warp import coadd_clip as _coadd_clip
 from repro.kernels.warp.warp import coadd_fused as _coadd_fused
+from repro.kernels.warp.warp import coadd_hist as _coadd_hist
+from repro.kernels.warp.warp import coadd_moments as _coadd_moments
 from repro.kernels.warp.warp import mosaic_bricks as _mosaic_bricks
 from repro.kernels.warp.warp import warp_project as _warp_project
 
@@ -46,6 +49,36 @@ def coadd_fused(pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels=None,
     return _coadd_fused(
         pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels=psf_kernels,
         block_rows=block_rows, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def coadd_moments(pixels, wcs_vecs, accepts, grid_ra, grid_dec,
+                  psf_kernels=None, block_rows=8, interpret=True):
+    """Fused robust pass 1: (N,H,W) images -> (S0, S1, S2) moment maps."""
+    return _coadd_moments(
+        pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels=psf_kernels,
+        block_rows=block_rows, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def coadd_clip(pixels, wcs_vecs, accepts, grid_ra, grid_dec, center, thresh,
+               psf_kernels=None, block_rows=8, interpret=True):
+    """Fused robust final pass: accumulate samples inside the clip window."""
+    return _coadd_clip(
+        pixels, wcs_vecs, accepts, grid_ra, grid_dec, center, thresh,
+        psf_kernels=psf_kernels, block_rows=block_rows, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("nbins", "block_rows", "interpret"))
+def coadd_hist(pixels, wcs_vecs, accepts, grid_ra, grid_dec, lo, inv_w,
+               nbins=16, psf_kernels=None, block_rows=8, interpret=True):
+    """Fused median round 1: (nbins, Q, Q) weighted binapprox histogram."""
+    return _coadd_hist(
+        pixels, wcs_vecs, accepts, grid_ra, grid_dec, lo, inv_w, nbins=nbins,
+        psf_kernels=psf_kernels, block_rows=block_rows, interpret=interpret,
     )
 
 

@@ -430,6 +430,250 @@ def coadd_fused(
     return out[0], out[1]
 
 
+# ----- robust-reduce passes (DESIGN.md §11): fused monoidal kernels -----
+#
+# Sigma-clipped / median stacks decompose into monoidal passes (reducer.py);
+# each pass below is `coadd_fused` with a different per-image accumulator,
+# sharing the accumulate-innermost grid idiom, the warp, and the in-kernel
+# PSF variants — the (N, Q, Q) sample stack still never materializes in HBM.
+# Per-pixel operands computed between passes (clip center/radius, histogram
+# bounds) arrive as (Q, Q) arrays blocked like the output rows.
+
+def _fused_inputs(pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels,
+                  block_rows):
+    """Grid + specs + operand prefix shared by every fused coadd kernel.
+
+    Returns (grid, in_specs, operands, psf_mode, q, block_rows); callers
+    append their pass-specific operands/specs after the grids.
+    """
+    n, h, w = pixels.shape
+    q = grid_ra.shape[0]
+    block_rows = min(block_rows, q)
+    if q % block_rows:
+        raise ValueError(f"npix {q} must divide block_rows {block_rows}")
+    in_specs = [
+        pl.BlockSpec((1, 8), lambda r, i: (i, 0)),
+        pl.BlockSpec((1, 1), lambda r, i: (i, 0)),
+        pl.BlockSpec((1, h, w), lambda r, i: (i, 0, 0)),
+        pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
+        pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
+    ]
+    operands = [
+        wcs_vecs.astype(jnp.float32),
+        accepts.astype(jnp.float32).reshape(n, 1),
+        pixels.astype(jnp.float32),
+        grid_ra,
+        grid_dec,
+    ]
+    psf_mode = "none"
+    if psf_kernels is not None and psf_kernels.ndim == 3:
+        kh, kw = psf_kernels.shape[1], psf_kernels.shape[2]
+        in_specs.insert(2, pl.BlockSpec((1, kh, kw), lambda r, i: (i, 0, 0)))
+        operands.insert(2, psf_kernels.astype(jnp.float32))
+        psf_mode = "2d"
+    elif psf_kernels is not None:
+        k_width = psf_kernels.shape[1]
+        in_specs.insert(2, pl.BlockSpec((1, k_width), lambda r, i: (i, 0)))
+        operands.insert(2, psf_kernels.astype(jnp.float32))
+        psf_mode = "sep"
+    return (q // block_rows, n), in_specs, operands, psf_mode, q, block_rows
+
+
+def _warped_sample(refs, psf_mode):
+    """Shared per-step prologue: unpack refs, PSF-prep, warp one image.
+
+    ``refs`` is the operand-ref prefix [wcs, accept, (kern?), image, gra,
+    gdec]; returns (accept scalar, masked value, mask, leftover refs).
+    """
+    wcs_ref, accept_ref = refs[0], refs[1]
+    if psf_mode == "none":
+        image_ref, gra_ref, gdec_ref = refs[2], refs[3], refs[4]
+        rest = refs[5:]
+        img = image_ref[0]
+    else:
+        kern_ref, image_ref = refs[2], refs[3]
+        gra_ref, gdec_ref = refs[4], refs[5]
+        rest = refs[6:]
+        if psf_mode == "2d":
+            img = _convolve_2d_matmul(image_ref[0], kern_ref[0])
+        else:
+            img = _convolve_sep_matmul(image_ref[0], kern_ref[0, :])
+    sx, sy = _sky_to_pixel(gra_ref[...], gdec_ref[...], wcs_ref[0, :])
+    vm, m = _bilinear_via_matmul(img, sx, sy)
+    return accept_ref[0, 0], vm, m, rest
+
+
+def _coadd_moments_kernel(*refs, psf_mode):
+    """Robust pass 1: weighted moments S0 = Σc, S1 = Σt, S2 = Σt²/c."""
+    a, vm, m, rest = _warped_sample(refs, psf_mode)
+    s0_ref, s1_ref, s2_ref = rest
+    # vm is already mask-scaled; t²/c with binary per-pixel coverage is
+    # vm²/m, guarded where the image does not cover the pixel.
+    s2c = jnp.where(m > 0, vm * vm / jnp.where(m > 0, m, 1.0), 0.0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        s0_ref[...] = m * a
+        s1_ref[...] = vm * a
+        s2_ref[...] = s2c * a
+
+    @pl.when(i > 0)
+    def _accum():
+        s0_ref[...] += m * a
+        s1_ref[...] += vm * a
+        s2_ref[...] += s2c * a
+
+
+def _coadd_clip_kernel(*refs, psf_mode):
+    """Robust final pass: accumulate only samples inside |x - center| <= r.
+
+    ``center``/``thresh`` are fixed (Q, Q) operands from the completed
+    moments (or histogram) pass, blocked identically to the output rows.
+    """
+    a, vm, m, rest = _warped_sample(refs, psf_mode)
+    center_ref, thresh_ref, coadd_ref, depth_ref = rest
+    # Division-free form, matching reducer.clip_local bit-for-bit:
+    # |vm - m*center| <= m*thresh  ==  |vm/m - center| <= thresh for m > 0.
+    keep = ((m > 0)
+            & (jnp.abs(vm - m * center_ref[...]) <= m * thresh_ref[...])
+            ).astype(vm.dtype)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        coadd_ref[...] = vm * keep * a
+        depth_ref[...] = m * keep * a
+
+    @pl.when(i > 0)
+    def _accum():
+        coadd_ref[...] += vm * keep * a
+        depth_ref[...] += m * keep * a
+
+
+def _coadd_hist_kernel(*refs, psf_mode, nbins):
+    """Median round 1: coverage-weighted binapprox histogram.
+
+    Output block is (nbins, block_rows, q) — every step owns the full bin
+    axis of its row block, and the static loop over bins keeps the scatter
+    as nbins dense masked accumulations (no TPU gather needed).
+    """
+    a, vm, m, rest = _warped_sample(refs, psf_mode)
+    lo_ref, inv_w_ref, hist_ref = rest
+    x = jnp.where(m > 0, vm / jnp.where(m > 0, m, 1.0), 0.0)
+    b = jnp.clip(jnp.floor((x - lo_ref[...]) * inv_w_ref[...]), 0, nbins - 1)
+    wgt = m * a
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        for j in range(nbins):
+            hist_ref[j] = wgt * (b == j).astype(wgt.dtype)
+
+    @pl.when(i > 0)
+    def _accum():
+        for j in range(nbins):
+            hist_ref[j] += wgt * (b == j).astype(wgt.dtype)
+
+
+def coadd_moments(
+    pixels: jnp.ndarray,    # (N, H, W)
+    wcs_vecs: jnp.ndarray,  # (N, 8)
+    accepts: jnp.ndarray,   # (N,)
+    grid_ra: jnp.ndarray,   # (Q, Q)
+    grid_dec: jnp.ndarray,  # (Q, Q)
+    *,
+    psf_kernels: jnp.ndarray | None = None,
+    block_rows: int = 8,
+    interpret: bool = True,
+):
+    """Fused robust pass 1 -> (S0, S1, S2) moment maps, one kernel."""
+    grid, in_specs, operands, psf_mode, q, block_rows = _fused_inputs(
+        pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels, block_rows
+    )
+    out = pl.pallas_call(
+        functools.partial(_coadd_moments_kernel, psf_mode=psf_mode),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((block_rows, q), lambda r, i: (r, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((q, q), jnp.float32)] * 3,
+        compiler_params=_tpu_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+    return out[0], out[1], out[2]
+
+
+def coadd_clip(
+    pixels: jnp.ndarray,
+    wcs_vecs: jnp.ndarray,
+    accepts: jnp.ndarray,
+    grid_ra: jnp.ndarray,
+    grid_dec: jnp.ndarray,
+    center: jnp.ndarray,    # (Q, Q) clip center (mean or binapprox median)
+    thresh: jnp.ndarray,    # (Q, Q) clip radius
+    *,
+    psf_kernels: jnp.ndarray | None = None,
+    block_rows: int = 8,
+    interpret: bool = True,
+):
+    """Fused robust final pass -> (coadd, depth) of surviving samples."""
+    grid, in_specs, operands, psf_mode, q, block_rows = _fused_inputs(
+        pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels, block_rows
+    )
+    in_specs += [
+        pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
+        pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
+    ]
+    operands += [center.astype(jnp.float32), thresh.astype(jnp.float32)]
+    out = pl.pallas_call(
+        functools.partial(_coadd_clip_kernel, psf_mode=psf_mode),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((block_rows, q), lambda r, i: (r, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((q, q), jnp.float32)] * 2,
+        compiler_params=_tpu_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+    return out[0], out[1]
+
+
+def coadd_hist(
+    pixels: jnp.ndarray,
+    wcs_vecs: jnp.ndarray,
+    accepts: jnp.ndarray,
+    grid_ra: jnp.ndarray,
+    grid_dec: jnp.ndarray,
+    lo: jnp.ndarray,        # (Q, Q) binapprox lower bound (mu - sigma)
+    inv_w: jnp.ndarray,     # (Q, Q) reciprocal bin width
+    *,
+    nbins: int = 16,
+    psf_kernels: jnp.ndarray | None = None,
+    block_rows: int = 8,
+    interpret: bool = True,
+):
+    """Fused median round 1 -> (nbins, Q, Q) weighted binapprox histogram."""
+    grid, in_specs, operands, psf_mode, q, block_rows = _fused_inputs(
+        pixels, wcs_vecs, accepts, grid_ra, grid_dec, psf_kernels, block_rows
+    )
+    in_specs += [
+        pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
+        pl.BlockSpec((block_rows, q), lambda r, i: (r, 0)),
+    ]
+    operands += [lo.astype(jnp.float32), inv_w.astype(jnp.float32)]
+    out = pl.pallas_call(
+        functools.partial(_coadd_hist_kernel, psf_mode=psf_mode, nbins=nbins),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((nbins, block_rows, q), lambda r, i: (0, r, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((nbins, q, q), jnp.float32)],
+        compiler_params=_tpu_params(("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
+    return out[0]
+
+
 # ----- brick mosaic: scatter cached tiles into a query canvas (§9) -----
 def _mosaic_kernel(off_ref, tile_ref, cov_ref, coadd_ref, depth_ref, *, bh, bw):
     """One grid step merges one brick tile at its dynamic (row, col) offset.

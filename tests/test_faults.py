@@ -215,6 +215,97 @@ def test_batch_streaming_heals_upload_failure(survey):
         np.testing.assert_array_equal(c.depth, f.depth)
 
 
+# ----- robust multi-pass fault domain (DESIGN.md §11) -----------------------
+
+ROBUST = ("clipped", "median")
+_ROBUST_REFS = {}
+
+
+def _robust_reference(survey, red):
+    """Fault-free streaming robust stack, shared across the robust matrix."""
+    if red not in _ROBUST_REFS:
+        _ROBUST_REFS[red] = _chaos(survey).run(QUERY, "sql_structured",
+                                               reduce=red)
+    return _ROBUST_REFS[red]
+
+
+@pytest.mark.parametrize("red", ROBUST)
+def test_robust_midpass_kill_replays_partial_journal_bitwise(survey, red):
+    """A kill inside pass 1 leaves a partial pass-1 journal; the resume
+    replays exactly the finished window and reproduces the uninterrupted
+    robust stack bitwise."""
+    ref = _robust_reference(survey, red)
+    _, n_windows = _query_shape(survey, "sql_structured")
+    assert n_windows >= 2
+    inj = ChaosInjector(FaultSchedule(kill_after_windows=1))
+    eng = _chaos(survey, injector=inj)
+    with pytest.raises(QueryKilled):
+        eng.run(QUERY, "sql_structured", reduce=red)
+    assert len(eng._journals) == 1      # the killed pass's journal survives
+    r = eng.run(QUERY, "sql_structured", reduce=red)
+    assert r.stats.resumed_windows == 1  # only the finished window replays
+    assert r.stats.reduce_passes == (3 if red == "median" else 2)
+    assert len(eng._journals) == 0      # completion retires every pass journal
+    np.testing.assert_array_equal(r.coadd, ref.coadd)
+    np.testing.assert_array_equal(r.depth, ref.depth)
+
+
+@pytest.mark.parametrize("red", ROBUST)
+def test_robust_seam_kill_resumes_without_rerunning_pass1(survey, red):
+    """A kill at the pass-1/pass-2 seam (every pass-1 window journaled,
+    no later pass started) must resume by replaying ALL of pass 1 from the
+    journal — zero re-executed pass-1 windows — and still match bitwise."""
+    ref = _robust_reference(survey, red)
+    _, n_windows = _query_shape(survey, "sql_structured")
+    inj = ChaosInjector(FaultSchedule(kill_after_windows=n_windows))
+    eng = _chaos(survey, injector=inj)
+    with pytest.raises(QueryKilled):
+        eng.run(QUERY, "sql_structured", reduce=red)
+    assert len(eng._journals) == 1
+    r = eng.run(QUERY, "sql_structured", reduce=red)
+    assert r.stats.resumed_windows == n_windows  # pass 1 replayed, not rerun
+    np.testing.assert_array_equal(r.coadd, ref.coadd)
+    np.testing.assert_array_equal(r.depth, ref.depth)
+
+
+@pytest.mark.parametrize("red", ROBUST)
+def test_robust_upload_failure_retries_to_bitwise_parity(survey, red):
+    ref = _robust_reference(survey, red)
+    inj = ChaosInjector(FaultSchedule(upload_fail_ordinals=(0,)))
+    r = _chaos(survey, injector=inj).run(QUERY, "sql_structured", reduce=red)
+    assert inj.injected["upload_fail"] == 1
+    assert r.stats.retries >= 1
+    np.testing.assert_array_equal(r.coadd, ref.coadd)
+    np.testing.assert_array_equal(r.depth, ref.depth)
+
+
+@pytest.mark.parametrize("red", ROBUST)
+def test_robust_quarantine_excludes_pack_from_every_pass(survey, red):
+    """A persistently poisoned pack quarantined during pass 1 must stay
+    excluded through the clip pass: the answer equals the clean robust run
+    with that pack gated off at plan time (any pass disagreeing about the
+    sample set would shift depth by whole coverage units)."""
+    method = "sql_structured"
+    packs, _ = _query_shape(survey, method)
+    bad = int(packs[0])
+    inj = ChaosInjector(FaultSchedule(
+        poison=(PoisonSpec(pack=bad, mode="nan", count=None),)
+    ))
+    r = _chaos(survey, injector=inj, on_fault="quarantine").run(
+        QUERY, method, reduce=red)
+    assert r.stats.partial
+    assert r.stats.uncovered_packs == (bad,)
+    assert r.stats.quarantined_packs >= 1
+    assert np.isfinite(r.coadd).all() and np.isfinite(r.depth).all()
+
+    eng = _chaos(survey)
+    plan = eng.plan(QUERY, method, reduce=red)
+    plan.gate[bad] = False
+    clean = eng.execute(plan)
+    np.testing.assert_array_equal(r.depth, clean.depth)
+    np.testing.assert_allclose(r.coadd, clean.coadd, rtol=1e-5, atol=1e-5)
+
+
 # ----- the seeded acceptance drill -----------------------------------------
 
 def test_seeded_chaos_drill_all_faults_at_once(survey):

@@ -1,0 +1,218 @@
+"""Property-based suite for the robust reducers (ISSUE 10 satellite).
+
+Four invariants pin the `reducer` robust-stacking contract:
+
+1. **Permutation invariance** — a robust stack is a function of the sample
+   *set*; shuffling the image axis changes nothing beyond float summation
+   order.
+2. **No-outlier identity** — when every sample sits inside the clip window,
+   the clipped stack IS the mean stack, bitwise (the keep mask is all-True,
+   so the very same sums run).  Stacks are kept at depth <= 9 per pixel:
+   any sample of n values has max |x - mean| <= sigma*sqrt(n-1), so n <= 9
+   guarantees no 3-sigma clip can fire regardless of the drawn values.
+3. **Outlier rejection** — one sample displaced by a large delta from an
+   otherwise-constant stack never survives: with N >= k^2 + 2 images the
+   outlier's distance (sigma*sqrt(N-1)) clears the k-sigma radius, for the
+   clipped mean and the two-round median alike, and the surviving depth is
+   exactly N - 1.
+4. **Odd-N constant-stack median exactness** — a constant stack of dyadic
+   values (exact float sums => exact moments => sigma == 0) reports the
+   constant exactly: binapprox degenerates to med = mu with a true-zero bin
+   width, not an epsilon-wide one.
+
+Each property is a plain ``_check_*`` helper driven two ways: a seeded
+deterministic grid (always runs, keeps the properties in the tier-1 lane
+even where hypothesis isn't installed) and a hypothesis `@given` search.
+
+Plus the §11 bugfix regressions: ``reducer.normalize`` and
+``CoaddResult.normalized`` must divide fractional depths exactly (a
+depth-0.5 border pixel is *routine* once clip masks exist) and mask
+depth == 0 exactly rather than through an epsilon clamp.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import reducer
+from repro.core.engine import CoaddResult, JobStats
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # the deterministic grids below still run
+    HAVE_HYPOTHESIS = False
+
+H = W = 6
+ROBUST = ("clipped", "median")
+
+
+def _random_stack(rng, n, lo=5.0, hi=15.0, cover=0.8):
+    """(tiles, covs) for n images: uniform samples, Bernoulli coverage."""
+    x = rng.uniform(lo, hi, (n, H, W)).astype(np.float32)
+    c = (rng.uniform(size=(n, H, W)) < cover).astype(np.float32)
+    return jnp.asarray(x * c), jnp.asarray(c)
+
+
+# ----- 1. permutation invariance -----
+
+def _check_permutation_invariance(seed):
+    rng = np.random.default_rng(seed)
+    tiles, covs = _random_stack(rng, 12)
+    perm = rng.permutation(12)
+    for red in ROBUST:
+        a_c, a_d = reducer.robust_local(tiles, covs, red)
+        b_c, b_d = reducer.robust_local(tiles[perm], covs[perm], red)
+        np.testing.assert_allclose(a_c, b_c, rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(a_d, b_d, rtol=1e-6, atol=1e-5)
+
+
+# ----- 2. clipped == mean when nothing is an outlier -----
+
+def _check_clipped_is_mean_without_outliers(seed):
+    # Depth <= 8 per pixel: max deviation of any 8-sample set is
+    # sigma*sqrt(7) ~ 2.65 sigma < 3 sigma, so the keep mask is all-True
+    # and the clipped sums are THE mean sums — bitwise.
+    rng = np.random.default_rng(seed)
+    tiles, covs = _random_stack(rng, 8, cover=1.0)
+    mean_c, mean_d = reducer.reduce_local(tiles, covs)
+    clip_c, clip_d = reducer.robust_local(tiles, covs, "clipped")
+    assert np.array_equal(np.asarray(mean_c), np.asarray(clip_c))
+    assert np.array_equal(np.asarray(mean_d), np.asarray(clip_d))
+
+
+# ----- 3. a single > k-sigma outlier never survives -----
+
+def _check_outlier_rejected(base, delta, outlier_idx, n=16):
+    x = np.full((n, H, W), base, np.float32)
+    x[outlier_idx] += np.float32(delta)
+    tiles = jnp.asarray(x)
+    covs = jnp.ones((n, H, W), jnp.float32)
+    for red in ROBUST:
+        coadd, depth = reducer.robust_local(tiles, covs, red)
+        # The outlier is gone — exactly n-1 samples survive everywhere...
+        np.testing.assert_array_equal(np.asarray(depth), n - 1.0)
+        # ...and what survives is the constant base stack.
+        np.testing.assert_allclose(
+            np.asarray(coadd), (n - 1.0) * base, rtol=2e-5
+        )
+
+
+# ----- 4. median of an odd-N constant stack is exact -----
+
+def _check_median_constant_exact(value, n):
+    # Dyadic values make every partial sum exact, so mu == value and
+    # sigma == 0 exactly; binapprox must then report med == mu with a
+    # *true* zero bin width (the inv_w clamp must not leak an epsilon
+    # into the bin centers).
+    assert n % 2 == 1
+    tiles = jnp.full((n, H, W), value, jnp.float32)
+    covs = jnp.ones((n, H, W), jnp.float32)
+    coadd, depth = reducer.robust_local(tiles, covs, "median")
+    np.testing.assert_array_equal(np.asarray(depth), float(n))
+    out = np.asarray(reducer.normalize(coadd, depth))
+    np.testing.assert_array_equal(out, np.float32(value))
+
+
+# ----- seeded deterministic grids (always run) -----
+
+SEEDS = [82, 7, 1010, 2026]
+OUTLIER_GRID = [
+    (10.0, 500.0, 3),
+    (10.0, -400.0, 0),
+    (0.25, 50.0, 9),
+    (-6.0, 900.0, 15),
+]
+CONSTANT_GRID = [(1.25, 3), (7.5, 5), (0.375, 9), (12.0, 15)]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_permutation_invariance(seed):
+    _check_permutation_invariance(seed)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_clipped_is_mean_without_outliers(seed):
+    _check_clipped_is_mean_without_outliers(seed)
+
+
+@pytest.mark.parametrize("base,delta,idx", OUTLIER_GRID)
+def test_outlier_rejected(base, delta, idx):
+    _check_outlier_rejected(base, delta, idx)
+
+
+@pytest.mark.parametrize("value,n", CONSTANT_GRID)
+def test_median_constant_exact(value, n):
+    _check_median_constant_exact(value, n)
+
+
+def test_unknown_reduce_rejected():
+    tiles = jnp.ones((3, 2, 2), jnp.float32)
+    with pytest.raises(ValueError, match="unknown reduce"):
+        reducer.robust_local(tiles, tiles, "trimmed")
+
+
+# ----- §11 bugfix regressions: exact depth masking -----
+
+def test_normalize_fractional_depth_exact():
+    # A depth-0.5 pixel (half-weight border sample surviving a clip) must
+    # divide by exactly 0.5 — any epsilon clamp or epsilon add skews it.
+    coadd = jnp.asarray([[3.0, 0.0], [1.0, 2.5]], jnp.float32)
+    depth = jnp.asarray([[0.5, 0.0], [1e-7, 2.5]], jnp.float32)
+    out = np.asarray(reducer.normalize(coadd, depth))
+    assert out[0, 0] == np.float32(3.0) / np.float32(0.5)  # exactly 6.0
+    assert out[0, 1] == 0.0                                # masked, not 0/eps
+    assert out[1, 0] == np.float32(1.0) / np.float32(1e-7)  # tiny but real
+    assert out[1, 1] == np.float32(1.0)
+
+
+def test_result_normalized_fractional_depth_exact():
+    # Same contract on the host-side result object.
+    stats = JobStats("m", 0, 0, 0, 0.0, 0.0, 0.0)
+    res = CoaddResult(
+        coadd=np.asarray([[3.0, 7.0]], np.float32),
+        depth=np.asarray([[0.5, 0.0]], np.float32),
+        stats=stats,
+    )
+    out = res.normalized
+    assert out[0, 0] == np.float32(6.0)
+    assert out[0, 1] == 0.0
+
+
+# ----- hypothesis-driven search over the same properties -----
+
+if HAVE_HYPOTHESIS:
+    _common = settings(
+        deadline=None,
+        max_examples=20,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+
+    @_common
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_permutation_invariance_hypothesis(seed):
+        _check_permutation_invariance(seed)
+
+    @_common
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_clipped_is_mean_without_outliers_hypothesis(seed):
+        _check_clipped_is_mean_without_outliers(seed)
+
+    @_common
+    @given(
+        base=st.floats(-20.0, 20.0),
+        delta=st.one_of(st.floats(50.0, 2000.0), st.floats(-2000.0, -50.0)),
+        idx=st.integers(0, 15),
+    )
+    def test_outlier_rejected_hypothesis(base, delta, idx):
+        _check_outlier_rejected(base, delta, idx)
+
+    @_common
+    @given(
+        k=st.integers(-160, 160),
+        n=st.integers(1, 10),
+    )
+    def test_median_constant_exact_hypothesis(k, n):
+        _check_median_constant_exact(k / 8.0, 2 * n + 1)
